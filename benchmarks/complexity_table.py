@@ -1,0 +1,40 @@
+"""Paper §4 complexity model (Eqs. 7-14): closed forms vs instrumented
+op-counting, plus memory-access identity M(msGeMM) == M(GeMM) (Eq. 12),
+swept over shapes and d."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import complexity as C
+
+SWEEP = [
+    # (m, k, b, d)
+    (8, 8, 1, 1), (16, 16, 2, 2), (32, 24, 1, 2), (64, 12, 3, 2),
+    (24, 36, 2, 3),
+]
+
+
+def run() -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    rng = np.random.default_rng(0)
+    for m, k, b, d in SWEEP:
+        codes = rng.integers(0, 16, size=(m, k)).astype(np.uint8)
+        x = rng.standard_normal((k, b))
+        y, cnt = C.counted_msgemm(codes, x, d)
+        ok_fma = cnt.fma == C.c_lut(k, d) * b
+        ok_add = cnt.add == C.c_consume(m, k, d) * b
+        ok_mem = cnt.mem == C.m_msgemm(m, k, b)
+        _, gcnt = C.counted_gemm(rng.standard_normal((m, k)), x)
+        ok_mem_eq = cnt.mem == gcnt.mem  # Eq. 12: identical memory traffic
+        lines.append(
+            f"complexity/m{m}k{k}b{b}d{d},0.0,"
+            f"eq7={ok_fma} eq9={ok_add} eq12={ok_mem} "
+            f"mem_identical={ok_mem_eq} "
+            f"total={cnt.total_compute} bound_eq13={C.c_msgemm(m, k, b, d)}")
+    # LUT footprint table (drives the kernel's VMEM budget)
+    for d in (1, 2, 3, 4):
+        lines.append(
+            f"complexity/lut_bytes_k12288_b64_d{d},0.0,"
+            f"bytes={C.lut_bytes(12288, d, 64)}")
+    return lines

@@ -1,0 +1,55 @@
+"""Paper §6 hardware analysis transposed to TPU (DESIGN.md §2).
+
+The paper: produce runs at Tensor-Core rate (312 TF A100), consume at
+CUDA-core rate (19.5 TF) -> msGeMM unrealizable without a LUT-add unit.
+TPU v5e-class analogue: produce on the MXU (197 TF bf16), consume as
+vector gather-adds on the VPU (~4 TF effective).
+
+For each assigned-arch *decode* GeMM (m = output dim, k = input dim) we
+report the end-to-end time model under three execution schemes:
+  dense-MXU      2·m·k MACs at MXU rate (naive GeMM, Eq. 14)
+  msgemm-tpu     produce@MXU + consume@VPU  (current hardware, §6 problem)
+  msgemm-lutadd  produce@MXU + consume@MXU-rate (the paper's proposal)
+"""
+
+from __future__ import annotations
+
+from benchmarks.roofline import HW
+from repro import configs
+from repro.core import complexity as C
+
+
+def gemm_times(m: int, k: int, d: int = 3, b: int = 1):
+    fma_rate = HW.peak_flops / 2  # FMA/s; a LUT-add unit does 1 add/slot
+    dense = m * k * b / fma_rate
+    produce = 16**d * k * b / fma_rate  # d FMAs per entry x 16^d·k/d entries
+    consume_ops = (k / d) * m * b
+    return {
+        "dense_mxu": dense,
+        "msgemm_tpu": produce + consume_ops / HW.vpu_flops,
+        "msgemm_lutadd": produce + consume_ops / fma_rate,
+        "instr_ratio": C.speedup(m, k, b, d),
+    }
+
+
+def run() -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    for name, (m, k) in {
+        "gpt3_mlp2": (49152, 12288),
+        "starcoder2_up": (24576, 6144),
+        "gemma2b_lmhead": (256000, 2048),
+        "llama4_wq": (5120, 5120),
+    }.items():
+        t = gemm_times(m, k)
+        lines.append(
+            f"phase_rates/{name},{t['msgemm_tpu'] * 1e6:.2f},"
+            f"dense_us={t['dense_mxu'] * 1e6:.2f} "
+            f"lutadd_us={t['msgemm_lutadd'] * 1e6:.2f} "
+            f"speedup_with_unit={t['dense_mxu'] / t['msgemm_lutadd']:.2f} "
+            f"slowdown_without={t['msgemm_tpu'] / t['dense_mxu']:.2f} "
+            f"instr_ratio={t['instr_ratio']:.2f}")
+    lines.append(
+        "phase_rates/conclusion,0.0,"
+        "consume-on-VPU dominates without a LUT-add unit — the paper's §6 "
+        "argument holds on TPU as well (DESIGN.md §2.B)")
+    return lines

@@ -1,0 +1,74 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig3 ...   # subset
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline rows are included when
+dry-run artifacts exist (benchmarks/results/dryrun/)."""
+
+from __future__ import annotations
+
+import sys
+
+
+def _roofline_lines() -> list[str]:
+    from benchmarks import roofline
+
+    lines = []
+    try:
+        rows = roofline.full_table()
+    except Exception as e:  # dry-run artifacts absent
+        return [f"roofline/unavailable,0.0,{type(e).__name__}"]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"roofline/{r['cell']},0.0,SKIP")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"roofline/{r['cell']},{r['step_time_bound_s'] * 1e6:.1f},"
+            f"dominant={r['dominant']} compute_s={t['compute_s']:.4f} "
+            f"memory_s={t['memory_s']:.4f} "
+            f"collective_s={t['collective_s']:.4f} "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"mem_gb={r.get('mem_per_dev_gb', -1)}")
+    return lines
+
+
+SUITES = ("fig3", "complexity", "phase_rates", "walltime",
+          "serve_throughput", "roofline")
+
+
+def main() -> None:
+    picked = sys.argv[1:] or list(SUITES)
+    out: list[str] = []
+    for name in picked:
+        if name == "fig3":
+            from benchmarks import fig3_speedup as m
+            out += m.run()
+        elif name == "complexity":
+            from benchmarks import complexity_table as m
+            out += m.run()
+        elif name == "phase_rates":
+            from benchmarks import phase_rates as m
+            out += m.run()
+        elif name == "walltime":
+            from benchmarks import walltime as m
+            out += m.run()
+        elif name == "serve_throughput":
+            from benchmarks import serve_throughput as m
+            out += m.run()
+        elif name == "roofline":
+            out += _roofline_lines()
+        else:
+            raise SystemExit(f"unknown suite {name}; pick from {SUITES}")
+    seen_header = False
+    for line in out:
+        if line.startswith("name,us_per_call"):
+            if seen_header:
+                continue
+            seen_header = True
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

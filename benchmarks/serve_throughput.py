@@ -1,0 +1,63 @@
+"""Measured end-to-end serving throughput (CPU, small model): batched
+prefill+decode generation under the three quantized-linear modes, and the
+weight-bytes each mode ships.  CPU has no MXU/VPU asymmetry, so this
+validates the *plumbing* (identical tokens from the two int4 paths) and
+quantifies weight compression; the TPU-rate projections live in
+phase_rates/roofline."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.linear import QuantConfig
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.quant import quantize_model
+from repro.quant.quantize import quantized_size_bytes
+from repro.runtime import serve as SV
+
+CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+                  d_ff=1024, vocab_size=8192, max_seq_len=512)
+
+
+def _bench(params, cfg, batch, new_tokens=16):
+    gen = jax.jit(lambda p, b: SV.generate(p, cfg, b,
+                                           max_new_tokens=new_tokens,
+                                           max_len=64))
+    out = gen(params, batch)
+    out.block_until_ready()  # compile
+    t0 = time.perf_counter()
+    out = gen(params, batch)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return batch["tokens"].shape[0] * new_tokens / dt, out
+
+
+def run() -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, CFG)
+    outs = {}
+    for mode, d in (("bf16", 3), ("int4_dequant", 3), ("msgemm", 3),
+                    ("msgemm", "adaptive")):
+        if mode == "bf16":
+            p, c = params, CFG
+        else:
+            qc = QuantConfig(mode=mode, d=d)
+            p = quantize_model(params, CFG, qc)
+            c = CFG.replace(quant=qc)
+        for bsz in (1, 8):
+            batch = {"tokens": jax.random.randint(key, (bsz, 16), 0,
+                                                  CFG.vocab_size)}
+            tps, out = _bench(p, c, batch)
+            tag = f"{mode}{'' if d == 3 else '_dadapt'}"
+            outs.setdefault(tag, {})[bsz] = out
+            lines.append(
+                f"serve_throughput/{tag}/b{bsz},{1e6 / tps:.1f},"
+                f"tok_per_s={tps:.1f} "
+                f"weight_mib={quantized_size_bytes(p) / 2**20:.2f}")
+    same = bool((outs["int4_dequant"][8] == outs["msgemm"][8]).mean() > 0.9)
+    lines.append(f"serve_throughput/int4_vs_msgemm_tokens_match,0.0,{same}")
+    return lines

@@ -1,0 +1,56 @@
+"""Measured CPU wall-time microbenchmarks (honest small-scale numbers):
+jnp msGeMM vs dense matmul vs the dequant path, and the Pallas kernels in
+interpret mode.  On CPU there is no MXU/VPU split, so these measure the
+*algorithm* (instruction mix), not the paper's hardware claim — the
+roofline/phase_rates modules carry the TPU-rate analysis."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut, packing, scales
+
+
+def _timeit(fn, *args, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    rng = np.random.default_rng(0)
+    for m, k, b, d in [(512, 384, 8, 2), (1024, 768, 16, 3),
+                       (4096, 768, 16, 3)]:
+        w = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        qt = scales.quantize_int4(w, block=12 * d if (12 * d) % d == 0 else 12)
+        x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+
+        dense = jax.jit(lambda w, x: w @ x)
+        t_dense = _timeit(dense, w, x)
+
+        ms = jax.jit(lambda c, x: lut.msgemm(
+            c, x, d, scales=qt.scales, scale_block=qt.block, chunk=8))
+        t_ms = _timeit(ms, qt.codes, x)
+
+        dq = jax.jit(lambda c, x: scales.dequantize(
+            scales.QuantizedTensor(c, qt.scales, qt.block, (m, k))) @ x)
+        t_dq = _timeit(dq, qt.codes, x)
+
+        lines.append(
+            f"walltime/msgemm_m{m}k{k}b{b}d{d},{t_ms:.1f},"
+            f"dense_us={t_dense:.1f} dequant_us={t_dq:.1f} "
+            f"cpu_ratio={t_dense / t_ms:.2f}")
+    # produce phase alone (the MXU-friendly reformulation)
+    x = jnp.asarray(rng.standard_normal((768, 16)), jnp.float32)
+    prod = jax.jit(lambda x: lut.produce(x, 3))
+    lines.append(f"walltime/produce_k768_b16_d3,{_timeit(prod, x):.1f},"
+                 f"lut_elems={16**3 * 256 * 16}")
+    return lines

@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-param decoder-only LM for a few
+hundred steps on the synthetic pipeline, with checkpointing + resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: 8 layers x d_model 768, vocab 32k, GQA 12/4 heads.)
+"""
+
+import argparse
+import functools
+import tempfile
+
+import jax
+
+from repro.data import DataConfig, SyntheticStream
+from repro.models.config import ModelConfig, param_count
+from repro.optim import AdamWConfig, schedules
+from repro.runtime import train as RT
+from repro.runtime.driver import DriverConfig, run
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--steps", type=int, default=300)
+parser.add_argument("--batch", type=int, default=16)
+parser.add_argument("--seq", type=int, default=128)
+parser.add_argument("--ckpt", default=None)
+args = parser.parse_args()
+
+cfg = ModelConfig(
+    name="lm-100m", num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+    d_ff=3072, vocab_size=32000, max_seq_len=args.seq,
+    mlp_activation="swiglu", remat=False)
+print(f"params: {param_count(cfg)['total'] / 1e6:.1f}M")
+
+tcfg = RT.TrainConfig(optimizer=AdamWConfig(
+    lr=schedules.warmup_cosine(3e-3, 20, args.steps)))
+data = SyntheticStream(DataConfig(
+    vocab_size=cfg.vocab_size, seq_len=args.seq + 1,
+    global_batch=args.batch, mode="lcg"))
+
+state = RT.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+step_fn = jax.jit(functools.partial(RT.train_step, cfg=cfg, tcfg=tcfg),
+                  donate_argnums=(0,))
+
+ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_train_lm_")
+res = run(state, step_fn, data,
+          DriverConfig(total_steps=args.steps, checkpoint_every=100,
+                       checkpoint_dir=ckpt_dir, log_every=20))
+first, last = res["metrics"][0]["loss"], res["metrics"][-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+      f"({(1 - last / first) * 100:.0f}% down); checkpoints in {ckpt_dir}")
+assert last < first, "training failed to reduce loss"

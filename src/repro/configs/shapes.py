@@ -1,0 +1,126 @@
+"""Input-shape cells for the assigned (architecture x shape) grid.
+
+  train_4k      seq_len=4096    global_batch=256   -> train_step
+  prefill_32k   seq_len=32768   global_batch=32    -> serve prefill
+  decode_32k    seq_len=32768   global_batch=128   -> serve_step (1 token,
+                                                      KV cache @ 32k)
+  long_500k     seq_len=524288  global_batch=1     -> serve_step, only for
+                                                      sub-quadratic archs
+
+Skip rules (DESIGN.md §5): long_500k runs only for family ssm/hybrid
+(xlstm, jamba); all pure full-attention archs skip it.  Whisper maps
+seq_len to *encoder frames* with a fixed 448-token decoder target.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention sequence mixing is quadratic at "
+                       "524288 tokens (DESIGN.md §5 skip)")
+    return True, ""
+
+
+def cells(cfg: ModelConfig):
+    """All live (shape, skip-reason) rows for this arch — 4 per arch."""
+    return {s: applicable(cfg, s) for s in SHAPES}
+
+
+# ---------------------------------------------------------------- specs
+def _whisper_lens(cfg: ModelConfig, shape: Shape) -> tuple[int, int]:
+    """(encoder frames, decoder tokens) for enc-dec cells."""
+    dec = min(cfg.max_seq_len, 448)
+    return shape.seq_len, dec
+
+
+def train_input_specs(cfg: ModelConfig, shape: Shape, *, batch=None) -> dict:
+    """ShapeDtypeStruct stand-ins for a train_step batch (no allocation)."""
+    B = batch or shape.global_batch
+    tok = jnp.int32
+    if cfg.is_encdec:
+        src, dec = _whisper_lens(cfg, shape)
+        return {
+            "frames": SDS((B, src, cfg.d_model), jnp.bfloat16
+                          if cfg.dtype == "bfloat16" else jnp.float32),
+            "tokens": SDS((B, dec), tok),
+            "labels": SDS((B, dec), tok),
+        }
+    S = shape.seq_len
+    out = {}
+    if cfg.frontend == "image_patches":
+        P = cfg.num_patches
+        out["patch_embeds"] = SDS((B, P, cfg.d_model), jnp.bfloat16
+                                  if cfg.dtype == "bfloat16" else jnp.float32)
+        out["tokens"] = SDS((B, S - P), tok)
+        out["labels"] = SDS((B, S), tok)  # patch positions labeled IGNORE
+    else:
+        out["tokens"] = SDS((B, S), tok)
+        out["labels"] = SDS((B, S), tok)
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: Shape, *, batch=None) -> dict:
+    B = batch or shape.global_batch
+    specs = train_input_specs(cfg, shape, batch=B)
+    specs.pop("labels")
+    return specs
+
+
+def _cache_specs(cfg: ModelConfig, B: int, max_len: int, dtype) -> dict:
+    """Mirror transformer.init_cache as ShapeDtypeStructs."""
+    from repro.models import transformer  # local to avoid cycles
+    import jax
+
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, max_len, dtype))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape, *, batch=None,
+                       cache_dtype=jnp.bfloat16) -> dict:
+    """Inputs for serve_step: one new token + the seq_len-deep cache."""
+    B = batch or shape.global_batch
+    if cfg.is_encdec:
+        src, dec = _whisper_lens(cfg, shape)
+        max_len = dec
+        cfg = cfg.replace(max_source_len=src)
+    else:
+        max_len = shape.seq_len
+    return {
+        "token": SDS((B,), jnp.int32),
+        "pos": SDS((B,), jnp.int32),
+        "cache": _cache_specs(cfg, B, max_len, cache_dtype),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, **kw) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, **kw)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, **kw)
+    return decode_input_specs(cfg, shape, **kw)

@@ -1,0 +1,14 @@
+"""repro.core — the paper's contribution: msGeMM (LUT-based low-precision GeMM).
+
+Public API:
+    packing     int4 code <-> value maps, storage/LUT-index packing
+    lut         produce / consume / msgemm (lowerable jnp formulation)
+    scales      row-block shared-scale quantization (§3.3)
+    complexity  Eqs. 7-15 analytic model + instrumented op counting
+    linear      QuantizedLinear — the framework integration point
+"""
+
+from repro.core import complexity, linear, lut, packing, scales  # noqa: F401
+from repro.core.linear import DENSE, QuantConfig  # noqa: F401
+from repro.core.lut import msgemm, msgemm_reference, produce, consume  # noqa: F401
+from repro.core.scales import quantize_int4, dequantize, QuantizedTensor  # noqa: F401

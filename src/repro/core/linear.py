@@ -1,0 +1,166 @@
+"""QuantizedLinear — msGeMM as a first-class linear-layer execution mode.
+
+Every weight-bearing linear in every architecture (attention projections,
+MLPs, MoE expert FFNs, mamba/xLSTM projections, lm_head) routes through this
+module.  Execution modes:
+
+* ``bf16``         dense matmul (training + dense-serve baseline; the
+                   paper's "naive GeMM", Eq. 14)
+* ``int4_dequant`` practical current-TPU int4 path: dequantize -> MXU matmul
+* ``msgemm``       the paper's algorithm (produce LUT on MXU, consume via
+                   gather-add), in the lowerable jnp formulation; ``impl=
+                   'pallas'`` selects the fused VMEM-tiled kernel for
+                   small-scale validation (kernels/msgemm.py)
+
+Weight-storage layouts for quantized modes (a §Perf lever — see
+EXPERIMENTS.md):
+
+* ``packed_idx``  int32 LUT indices, ceil(k/d) per row  (4·d bits -> 32 bits
+                  per chunk; 10.67 bits/weight at d=3).  Zero index math in
+                  the hot loop — the paper's §4 assumption.
+* ``packed_u8``   true int4 storage (2 codes/byte, 4 bits/weight); LUT
+                  indices built on the fly (free for d=2 — the byte IS the
+                  index; unpack+repack otherwise).
+
+Activation convention is row-major ``x (..., k) -> y (..., m)`` with the
+weight stored as the paper's ``M (m, k)``; internally we transpose to the
+paper's column layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut, packing, scales
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "bf16"  # bf16 | int4_dequant | msgemm
+    # LUT depth: an int, or 'adaptive' — pick d* = argmax Eq. 15 per
+    # linear from its static (out, in) dims (beyond-paper: small-m
+    # projections get d=2 where 16^d amortizes, big-m heads keep d=3/4;
+    # EXPERIMENTS.md §Perf C5).  Deterministic in the shapes, so init and
+    # apply always agree.
+    d: int | str = 3
+    scale_block: int = 0  # 0 -> 12*d (multiple of every d in 2..4, §3.3)
+    storage: str = "packed_idx"  # packed_idx | packed_u8
+    impl: str = "jnp"  # jnp | pallas
+    consume_chunk: int = 1  # j-chunks per consume scan step
+
+    def __post_init__(self):
+        if self.mode not in ("bf16", "int4_dequant", "msgemm"):
+            raise ValueError(f"unknown quant mode {self.mode}")
+        if self.d != "adaptive" and self.scale_block == 0:
+            object.__setattr__(self, "scale_block", 12 * int(self.d))
+        elif self.scale_block == 0:
+            object.__setattr__(self, "scale_block", 12)
+        if self.mode == "msgemm" and self.d != "adaptive":
+            scales.check_applicable(self.scale_block, int(self.d))
+
+    def resolve_d(self, in_dim: int, out_dim: int) -> int:
+        """The depth this linear actually uses (static in the shapes)."""
+        if self.d != "adaptive":
+            return int(self.d)
+        from repro.core import complexity
+
+        d_star, _ = complexity.best_d(out_dim, in_dim, range(2, 5))
+        # the shared scale block must stay a multiple of d (§3.3)
+        while self.scale_block % d_star:
+            d_star -= 1
+        return max(d_star, 2)
+
+
+DENSE = QuantConfig(mode="bf16")
+
+
+def init(key, in_dim: int, out_dim: int, cfg: QuantConfig = DENSE, *,
+         dtype=jnp.float32, init_scale: float | None = None) -> dict:
+    """Initialise params.  Quantized modes initialise by quantizing a random
+    dense weight (real deployments call quant.quantize_model on a trained
+    checkpoint; init keeps every mode self-contained for tests/dry-runs)."""
+    scale = init_scale if init_scale is not None else in_dim**-0.5
+    w = jax.random.normal(key, (out_dim, in_dim), jnp.float32) * scale
+    return from_dense(w, cfg, dtype=dtype)
+
+
+def from_dense(w: jnp.ndarray, cfg: QuantConfig = DENSE, *, dtype=jnp.float32) -> dict:
+    """Build this layer's params from a dense (out, in) weight matrix."""
+    out_dim, in_dim = w.shape
+    if cfg.mode == "bf16":
+        return {"w": w.astype(dtype)}
+    qt = scales.quantize_int4(w, cfg.scale_block)
+    p: dict[str, Any] = {"scales": qt.scales.astype(jnp.float32)}
+    if cfg.storage == "packed_idx":
+        p["idx"] = packing.pack_indices(qt.codes,
+                                        cfg.resolve_d(in_dim, out_dim))
+    else:
+        p["u8"] = packing.pack_storage(qt.codes)
+    return p
+
+
+def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
+          in_dim: int | None = None, precision=None) -> jnp.ndarray:
+    """x (..., in) -> y (..., out)."""
+    if cfg.mode == "bf16":
+        w = params["w"]
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=x.dtype, precision=precision)
+
+    k = in_dim if in_dim is not None else _infer_k(params, cfg)
+    m = params["scales"].shape[0]
+    d = cfg.resolve_d(k, m)
+    if cfg.mode == "int4_dequant":
+        codes = _codes(params, cfg, k, d)
+        qt = scales.QuantizedTensor(
+            codes=codes, scales=params["scales"], block=cfg.scale_block,
+            shape=(codes.shape[0], k))
+        w = scales.dequantize(qt, x.dtype)
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=x.dtype)
+
+    # ---- msgemm ----
+    if cfg.impl == "pallas":
+        from repro.kernels import ops as kops
+
+        codes = _codes(params, cfg, k, d)
+        batch = x.shape[:-1]
+        y = kops.msgemm(
+            codes, x.reshape(-1, k).T, d,
+            scales=params["scales"], scale_block=cfg.scale_block)
+        return y.T.reshape(*batch, -1).astype(x.dtype)
+
+    batch = x.shape[:-1]
+    xt = x.reshape(-1, k).T  # (k, B) — the paper's column layout
+    lut_t = lut.produce(xt, d, dtype=jnp.float32)
+    idx = params["idx"] if cfg.storage == "packed_idx" else (
+        packing.indices_from_storage(params["u8"], d, k))
+    y = lut.consume(
+        lut_t, idx, scales=params["scales"], scale_block=cfg.scale_block,
+        d=d, chunk=cfg.consume_chunk)
+    return y.T.reshape(*batch, -1).astype(x.dtype)
+
+
+def _infer_k(params: dict, cfg: QuantConfig) -> int:
+    if cfg.storage == "packed_u8":
+        return params["u8"].shape[-1] * 2
+    if cfg.d != "adaptive":
+        return params["idx"].shape[-1] * int(cfg.d)
+    raise ValueError("adaptive-d msgemm needs an explicit in_dim")
+
+
+def _codes(params: dict, cfg: QuantConfig, k: int, d: int) -> jnp.ndarray:
+    if cfg.storage == "packed_idx":
+        return packing.unpack_indices(params["idx"], d, k)
+    return packing.unpack_storage(params["u8"], k)
+
+
+def serving_config(cfg: QuantConfig, mode: str) -> QuantConfig:
+    """Derive a serving-time quant config from a layer's config."""
+    return replace(cfg, mode=mode)

@@ -1,0 +1,161 @@
+"""msGeMM look-up-table production and consumption (paper §3).
+
+Produce (§3.1):  ``L[i0..i_{d-1}, j] = sum_r b(i_r) * x(j*d + r)``  — all
+possible linear combinations of d consecutive activations with int4
+coefficients.  TPU adaptation (DESIGN.md §2.A): flattening the d index dims,
+this is one dense matmul ``L = B_d @ x_chunks`` with ``B_d (16^d, d)`` the
+tuple-basis matrix — i.e. phase 1 runs on the MXU.
+
+Consume (§3.2, Eq. 5): ``y(i) = sum_j L[packed_idx(i, j), j]`` — k/d table
+adds per output element instead of k FMAs.
+
+Shapes here follow the paper: ``x`` is (k, b) column-activations, ``y`` is
+(m, b).  ``core.linear`` adapts to the row-major (..., features) activation
+convention used by the models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+@functools.lru_cache(maxsize=8)
+def _tuple_basis_np(d: int):
+    import numpy as np
+
+    n = packing.NLEVELS**d
+    idx = np.arange(n)
+    cols = []
+    for r in range(d):
+        shift = 4 * (d - 1 - r)
+        cols.append((idx >> shift) & 0xF)
+    codes = np.stack(cols, axis=1)  # (16^d, d) codes, big-endian
+    vals = np.where(codes <= packing.INT4_MAX, codes, codes - packing.NLEVELS)
+    return vals.astype(np.float32)
+
+
+def tuple_basis(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """B_d (16^d, d): row ``i`` holds (b(i_0), ..., b(i_{d-1})) for flat index i."""
+    return jnp.asarray(_tuple_basis_np(d), dtype=dtype)
+
+
+def produce(x: jnp.ndarray, d: int, *, dtype=None) -> jnp.ndarray:
+    """Phase 1.  x (k, b) -> L (16^d, k/d, b).
+
+    Equivalent to Eq. 3, evaluated as the single matmul B_d @ x_chunks
+    (MXU-native).  Cost: 16^d * k * b FMAs == C(L)·b of Eq. 7.
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    k, b = x.shape
+    xp = packing.pad_k(x, d, axis=0)
+    kc = xp.shape[0] // d
+    x_chunks = xp.reshape(kc, d, b)  # (k/d, d, b)
+    basis = tuple_basis(d, dtype=dtype or x.dtype)
+    # (16^d, d) @ (d, k/d * b) -> (16^d, k/d, b)
+    lut = jax.lax.dot_general(
+        basis,
+        x_chunks,
+        ((((1,), (1,)), ((), ()))),
+        preferred_element_type=dtype or jnp.promote_types(x.dtype, jnp.float32),
+    )
+    return lut  # (16^d, k/d, b)
+
+
+def consume(
+    lut: jnp.ndarray,
+    packed_idx: jnp.ndarray,
+    *,
+    scales: jnp.ndarray | None = None,
+    scale_block: int | None = None,
+    d: int | None = None,
+    chunk: int = 1,
+) -> jnp.ndarray:
+    """Phase 2 (Eq. 5).  lut (16^d, k/d, b), packed_idx (m, k/d) -> y (m, b).
+
+    Pure-jnp formulation that lowers for the at-scale dry-runs: a
+    ``lax.scan`` over j-chunks, each step gathering (m, b) rows from the
+    current LUT slab and accumulating — HLO stays compact regardless of k.
+
+    ``scales``/``scale_block`` implement §3.3 row-block shared scales:
+    chunk j belongs to scale block (j*d)//scale_block, applied per chunk
+    (same result as the factored form; the Pallas kernel factors it).
+    """
+    n, kc, b = lut.shape
+    m = packed_idx.shape[0]
+    if scales is not None:
+        if d is None or scale_block is None:
+            raise ValueError("scales require d and scale_block")
+        if scale_block % d != 0:
+            raise ValueError(
+                f"§3.3: msGeMM needs scale blocks aligned to d (block={scale_block}, d={d})"
+            )
+    nsteps = (kc + chunk - 1) // chunk
+    pad = nsteps * chunk - kc
+    if pad:
+        lut = jnp.pad(lut, ((0, 0), (0, pad), (0, 0)))
+        packed_idx = jnp.pad(packed_idx, ((0, 0), (0, pad)))
+    # (steps, chunk, ...) leading-axis layout for scan
+    lut_s = jnp.moveaxis(lut.reshape(n, nsteps, chunk, b), 1, 0)
+    idx_s = jnp.moveaxis(packed_idx.reshape(m, nsteps, chunk), 1, 0)
+    if scales is not None:
+        cpd = scale_block // d  # chunks per scale block
+        jidx = jnp.arange(nsteps * chunk) // cpd
+        jidx = jnp.minimum(jidx, scales.shape[1] - 1).reshape(nsteps, chunk)
+        q_s = scales[:, jidx]  # (m, steps, chunk)
+        q_s = jnp.moveaxis(q_s, 1, 0)  # (steps, m, chunk)
+    else:
+        q_s = jnp.zeros((nsteps, 0, 0), lut.dtype)
+
+    def step(acc, args):
+        lut_j, idx_j, q_j = args  # (n, chunk, b), (m, chunk), (m, chunk)
+        lut_cj = jnp.moveaxis(lut_j, 1, 0)  # (chunk, n, b)
+        g = jax.vmap(lambda t, i: jnp.take(t, i, axis=0))(lut_cj, idx_j.T)
+        if scales is not None:  # g: (chunk, m, b)
+            g = g * q_j.T[..., None]
+        return acc + jnp.sum(g, axis=0, dtype=acc.dtype), None
+
+    acc0 = jnp.zeros((m, b), lut.dtype)
+    y, _ = jax.lax.scan(step, acc0, (lut_s, idx_s, q_s))
+    return y
+
+
+def msgemm(
+    codes: jnp.ndarray,
+    x: jnp.ndarray,
+    d: int,
+    *,
+    scales: jnp.ndarray | None = None,
+    scale_block: int | None = None,
+    chunk: int = 1,
+    dtype=None,
+) -> jnp.ndarray:
+    """Full two-phase msGeMM: y = dequant(codes) @ x (paper Eq. 1/5).
+
+    codes (m, k) uint8 4-bit codes; x (k, b) or (k,).  Returns (m, b)/(m,).
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    lut = produce(x, d, dtype=dtype)
+    idx = packing.pack_indices(codes, d)
+    y = consume(lut, idx, scales=scales, scale_block=scale_block, d=d, chunk=chunk)
+    return y[:, 0] if squeeze else y
+
+
+def msgemm_reference(codes, x, d, *, scales=None, scale_block=None):
+    """Naive O(m·k·b) oracle: dequantize then dense matmul (paper Eq. 14 path)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    w = packing.b_values(x.dtype)[jnp.asarray(codes, jnp.int32)]  # (m, k)
+    if scales is not None:
+        q = jnp.repeat(scales, scale_block, axis=1)[:, : w.shape[1]]
+        w = w * q
+    y = w.astype(jnp.float32) @ x.astype(jnp.float32)
+    return (y[:, 0] if squeeze else y).astype(x.dtype if x.dtype == jnp.float64 else jnp.float32)

@@ -1,0 +1,109 @@
+"""int4 code packing for msGeMM (paper §3.1–3.2).
+
+The paper stores the weight matrix M in int4. Code <-> value mapping is the
+two's-complement map ``b`` of §3.1::
+
+    b(0b0000)=0, b(0b0001)=1, ..., b(0b0111)=7, b(0b1000)=-8, ..., b(0b1111)=-1
+
+and its inverse ``b_hat`` (§3.2).  ``d`` consecutive 4-bit codes of a row of
+M concatenate into one look-up index ("d concatenated int4 together to form
+an int4d which can be used directly to dereference ... L" — §4).  We keep
+three representations:
+
+* ``codes``      uint8, one 4-bit code per element, shape (m, k)   — canonical
+* ``packed_u8``  uint8, two codes per byte, shape (m, ceil(k/2))   — storage
+* ``packed_idx`` int32, one LUT index per d-chunk, (m, ceil(k/d))  — consume
+
+``packed_idx`` is layout-compatible with the flattened LUT: index =
+sum_r code[j*d + r] * 16**(d-1-r) (big-endian within the chunk), matching
+``lut.tuple_basis``.  k is zero-padded to a multiple of d with code 0
+(b(0)=0, so padding contributes nothing regardless of the activations —
+paper footnote 2 assumes d | k; padding removes the assumption).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+INT4_MIN = -8
+INT4_MAX = 7
+NLEVELS = 16
+
+
+def b_values(dtype=jnp.float32) -> jnp.ndarray:
+    """The table b: code (0..15) -> int4 value (§3.1)."""
+    v = np.arange(NLEVELS)
+    v = np.where(v <= INT4_MAX, v, v - NLEVELS)  # two's complement
+    return jnp.asarray(v, dtype=dtype)
+
+
+def b_hat(values: jnp.ndarray) -> jnp.ndarray:
+    """Inverse map b_hat: int4 value -> 4-bit code (§3.2), e.g. -1 -> 0b1111."""
+    v = jnp.asarray(values, jnp.int32)
+    return jnp.where(v >= 0, v, v + NLEVELS).astype(jnp.uint8)
+
+
+def check_int4(values) -> None:
+    v = np.asarray(values)
+    if v.size and (v.min() < INT4_MIN or v.max() > INT4_MAX):
+        raise ValueError(f"values outside int4 range [{INT4_MIN},{INT4_MAX}]")
+
+
+def pad_k(arr: jnp.ndarray, d: int, axis: int = -1, value=0) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of d (code 0 == value 0)."""
+    k = arr.shape[axis]
+    rem = (-k) % d
+    if rem == 0:
+        return arr
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(arr, pads, constant_values=value)
+
+
+def pack_storage(codes: jnp.ndarray) -> jnp.ndarray:
+    """codes (m, k) uint8 -> packed bytes (m, ceil(k/2)); hi nibble first."""
+    c = pad_k(jnp.asarray(codes, jnp.uint8), 2)
+    hi, lo = c[..., 0::2], c[..., 1::2]
+    return (hi << 4 | lo).astype(jnp.uint8)
+
+
+def unpack_storage(packed: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_storage`."""
+    hi = (packed >> 4) & 0xF
+    lo = packed & 0xF
+    c = jnp.stack([hi, lo], axis=-1).reshape(*packed.shape[:-1], -1)
+    return c[..., :k].astype(jnp.uint8)
+
+
+def pack_indices(codes: jnp.ndarray, d: int) -> jnp.ndarray:
+    """codes (m, k) -> LUT indices (m, ceil(k/d)) int32 (big-endian chunks).
+
+    This is the zero-cost indexing of §4: the 4·d-bit concatenation of d
+    consecutive codes *is* the flat LUT index.
+    """
+    c = pad_k(jnp.asarray(codes, jnp.int32), d)
+    m = c.shape[:-1]
+    c = c.reshape(*m, -1, d)
+    weights = NLEVELS ** jnp.arange(d - 1, -1, -1, dtype=jnp.int32)
+    return jnp.sum(c * weights, axis=-1, dtype=jnp.int32)
+
+
+def unpack_indices(idx: jnp.ndarray, d: int, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_indices` (drops the zero padding)."""
+    idx = jnp.asarray(idx, jnp.int32)[..., :, None]
+    shifts = 4 * jnp.arange(d - 1, -1, -1, dtype=jnp.int32)
+    c = (idx >> shifts) & 0xF
+    c = c.reshape(*idx.shape[:-2], -1)
+    return c[..., :k].astype(jnp.uint8)
+
+
+def indices_from_storage(packed_u8: jnp.ndarray, d: int, k: int) -> jnp.ndarray:
+    """On-the-fly index construction from the 2-codes/byte storage format.
+
+    For d=2 with aligned chunks this is the identity (the byte *is* the LUT
+    index) — the TPU fast path.  For other d we unpack and repack.
+    """
+    if d == 2:
+        return packed_u8[..., : (k + 1) // 2].astype(jnp.int32)
+    return pack_indices(unpack_storage(packed_u8, k), d)

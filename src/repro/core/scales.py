@@ -1,0 +1,86 @@
+"""Shared-scale (bounding-box) quantization — paper §3.3.
+
+MSFP-style datatypes store int4 mantissas with a scale shared by a block of
+elements.  §3.3's applicability rule for msGeMM:
+
+* blocks laid out along a ROW of M with block size r, r >= d and ideally
+  d | r  -> applicable (the scale factors out after consuming L);
+* blocks laid out along a COLUMN of M -> NOT applicable (each LUT entry
+  would need a different scale per row).
+
+``quantize_int4`` produces the row-block format; ``check_applicable``
+enforces the rule and is exercised by tests/test_scales.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+class QuantizedTensor(NamedTuple):
+    """Row-block int4 quantized matrix (m, k).
+
+    codes:      (m, k) uint8, 4-bit codes (canonical)
+    scales:     (m, k//block) float32, shared per row-block (§3.3)
+    block:      scale block size r along k
+    shape:      original (m, k)
+    """
+
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+    block: int
+    shape: tuple
+
+
+def check_applicable(block: int, d: int, axis: str = "row") -> None:
+    """§3.3 rule: row-blocked scales with d | r compose with msGeMM."""
+    if axis != "row":
+        raise ValueError(
+            "§3.3: column-wise bounding boxes make msGeMM inapplicable "
+            "(each LUT entry would need a per-row scale)"
+        )
+    if block < d or block % d != 0:
+        raise ValueError(
+            f"§3.3: scale block r={block} must be >= d and a multiple of d={d}"
+        )
+
+
+def quantize_int4(
+    w: jnp.ndarray, block: int = 32, *, power_of_two: bool = False
+) -> QuantizedTensor:
+    """Symmetric row-block int4 quantization of a dense (m, k) matrix.
+
+    ``power_of_two=True`` restricts scales to 2^e (MSFP12-like shared
+    exponents, ref. [8] of the paper).
+    """
+    m, k = w.shape
+    kp = -(-k // block) * block
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, kp - k)))
+    wb = wp.reshape(m, kp // block, block)
+    amax = jnp.max(jnp.abs(wb), axis=-1)
+    scale = amax / packing.INT4_MAX  # symmetric: amax -> ±7, no clip error
+    if power_of_two:
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(scale, 1e-30))))
+    scale = jnp.where(amax == 0, 1.0, scale)
+    q = jnp.clip(
+        jnp.round(wb / scale[..., None]), packing.INT4_MIN, packing.INT4_MAX
+    ).astype(jnp.int32)
+    codes = packing.b_hat(q).reshape(m, kp)[:, :k]
+    return QuantizedTensor(codes=codes, scales=scale, block=block, shape=(m, k))
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct the dense matrix (the int4_dequant baseline path)."""
+    m, k = qt.shape
+    vals = packing.b_values(jnp.float32)[jnp.asarray(qt.codes, jnp.int32)]
+    q = jnp.repeat(qt.scales, qt.block, axis=1)[:, :k]
+    return (vals * q).astype(dtype)
+
+
+def quantization_error(w: jnp.ndarray, qt: QuantizedTensor) -> jnp.ndarray:
+    return jnp.max(jnp.abs(w - dequantize(qt, w.dtype)))

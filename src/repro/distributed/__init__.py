@@ -1,0 +1,4 @@
+"""Distribution layer: logical-axis sharding rules, mesh builders,
+collective helpers, straggler watchdog."""
+
+from repro.distributed import sharding  # noqa: F401

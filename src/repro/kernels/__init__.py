@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots msGeMM targets.
+
+msgemm.py       fused LUT produce+consume (the paper's algorithm; VMEM LUT)
+int4_matmul.py  blocked dequant+MXU dot (practical current-TPU baseline)
+ops.py          jit'd wrappers (tiling, padding, backend detection)
+ref.py          pure-jnp oracles used by the allclose sweeps
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

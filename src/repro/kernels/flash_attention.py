@@ -1,0 +1,97 @@
+"""Row-blocked online-softmax attention Pallas kernel (flash-style).
+
+The prefill-side hot spot: msGeMM covers the weight GeMMs, attention
+covers the O(S²) sequence mixing — at prefill_32k the (S, S) logits must
+never materialize (the jnp path q-chunks via lax.scan; this kernel is the
+TPU-native tile version with the online-softmax rescaling, so the working
+set is one (TQ, TK) tile + the (TQ, dh) accumulator in VMEM).
+
+Grid: (batch·heads, q blocks); the kernel loops over k blocks with a
+fori_loop carrying (m, l, acc) — the standard flash recurrence:
+
+    m' = max(m, rowmax(s));  p = exp(s - m');  c = exp(m - m')
+    l' = c·l + rowsum(p);    acc' = c·acc + p @ v
+
+Supports causal masking, sliding windows (gemma2 'local'), and logit
+soft-capping.  Validated against ref.flash_attention_ref in interpret
+mode (tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
+            window: int, softcap: float, scale: float):
+    iq = pl.program_id(1)
+    qb = q_ref[0].astype(jnp.float32) * scale  # (TQ, dh)
+    S = k_ref.shape[1]
+    qpos = iq * tq + jax.lax.iota(jnp.int32, tq)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = pl.load(k_ref, (0, pl.dslice(j * tk, tk), slice(None)))
+        vb = pl.load(v_ref, (0, pl.dslice(j * tk, tk), slice(None)))
+        s = qb @ kb.astype(jnp.float32).T  # (TQ, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * tk + jax.lax.iota(jnp.int32, tk)
+        ok = jnp.ones((tq, tk), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc_new = corr[:, None] * acc + p @ vb.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((tq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+    a0 = jnp.zeros((tq, q_ref.shape[-1]), jnp.float32)
+    # causal: blocks beyond the diagonal contribute nothing; bound the loop
+    nk = S // tk
+    if causal:
+        nk_eff = jnp.minimum(((iq + 1) * tq + tk - 1) // tk, nk)
+    else:
+        nk_eff = nk
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "tq", "tk",
+                              "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, tq: int = 128,
+                           tk: int = 128, interpret: bool = True):
+    """q (BH, Sq, dh), k/v (BH, Skv, dh) -> (BH, Sq, dh).
+
+    Caller pads Sq % tq == 0 and Skv % tk == 0 (ops.py wrapper)."""
+    BH, Sq, dh = q.shape
+    Skv = k.shape[1]
+    assert Sq % tq == 0 and Skv % tk == 0, (Sq, Skv, tq, tk)
+    scale = dh**-0.5
+    kern = functools.partial(_kernel, tq=tq, tk=tk, causal=causal,
+                             window=window, softcap=softcap, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, Sq // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skv, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Skv, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,85 @@
+"""Blocked int4 dequantize-then-matmul Pallas kernel — the *practical
+current-TPU* baseline the paper's proposal competes against (DESIGN.md §2.C).
+
+Weights are stored truly packed (2 codes/byte).  Per grid step the kernel
+unpacks a (TM, TK) weight tile in VMEM with bit ops, applies the §3.3
+row-block scales, and feeds the MXU with a dense (TM, TK)·(TK, TB) dot,
+accumulating over k tiles.  This is the standard int4 weight-only-quant
+GeMM shape used in production TPU serving stacks.
+
+Grid = (b_tiles, m_tiles, k_tiles), k innermost for output accumulation.
+Requires tk % scale_block == 0 so each k tile covers whole scale blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u8_ref, scale_ref, x_ref, y_ref, *, tk: int, scale_block: int,
+            acc_dtype):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    packed = u8_ref[...]  # (TM, TK//2) uint8, two codes per byte
+    hi = (packed >> 4) & 0xF
+    lo = packed & 0xF
+    codes = jnp.stack([hi, lo], axis=-1).reshape(packed.shape[0], tk)
+    c = codes.astype(jnp.int32)
+    vals = jnp.where(c <= 7, c, c - 16).astype(acc_dtype)  # b() map, §3.1
+    # §3.3 row-block scales
+    q = scale_ref[...].astype(acc_dtype)  # (TM, TK // scale_block)
+    w = (vals.reshape(packed.shape[0], tk // scale_block, scale_block)
+         * q[..., None]).reshape(packed.shape[0], tk)
+    x = x_ref[...].astype(acc_dtype)  # (TK, TB)
+    y_ref[...] += jax.lax.dot(w, x, preferred_element_type=acc_dtype).astype(
+        y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale_block", "tm", "tk", "tb", "interpret", "acc_dtype"),
+)
+def int4_matmul_pallas(
+    u8: jnp.ndarray,       # (m, k//2) packed codes
+    scales: jnp.ndarray,   # (m, k // scale_block)
+    x: jnp.ndarray,        # (k, b)
+    *,
+    scale_block: int,
+    tm: int = 256,
+    tk: int | None = None,
+    tb: int = 128,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jnp.ndarray:
+    m, k2 = u8.shape
+    k, b = x.shape
+    assert k == k2 * 2
+    if tk is None:
+        tk = scale_block * max(1, 256 // scale_block)
+    assert tk % scale_block == 0 and tk % 2 == 0
+    assert m % tm == 0 and k % tk == 0 and b % tb == 0, (m, k, b, tm, tk, tb)
+    sk = tk // scale_block
+
+    grid = (b // tb, m // tm, k // tk)
+    kern = functools.partial(
+        _kernel, tk=tk, scale_block=scale_block, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk // 2), lambda ib, im, ik: (im, ik)),
+            pl.BlockSpec((tm, sk), lambda ib, im, ik: (im, ik)),
+            pl.BlockSpec((tk, tb), lambda ib, im, ik: (ik, ib)),
+        ],
+        out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ik: (im, ib)),
+        out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
+        interpret=interpret,
+    )(u8, scales, x)

@@ -1,0 +1,121 @@
+"""Fused msGeMM Pallas TPU kernel — produce + consume with a VMEM-resident LUT.
+
+TPU adaptation of the paper's proposed "LUT-add unit" (paper §6, DESIGN.md
+§2.B).  Per grid step the kernel:
+
+1. *produce*: builds the LUT tile for TJ consecutive j-chunks directly in
+   VMEM via one small MXU dot  ``basis (16^d, d) · x_chunk (d, TJ·TB)``
+   — phase 1 at MXU rate, the TPU analogue of the paper's Tensor-Core
+   produce phase;
+2. *consume*: for each chunk, a vector gather from the VMEM LUT tile using
+   the packed 4·d-bit row codes as indices (zero index arithmetic, §4),
+   accumulating into the output block — phase 2 on the VPU/scalar path,
+   which is exactly the unit the paper says must be strengthened.
+
+Grid = (b_tiles, m_tiles, j_tiles) with j innermost so the output block
+accumulates across j steps (classic Pallas accumulation pattern).  Shared
+scales (§3.3) are applied in the *factored* form: one multiply per scale
+block after the block's chunks are summed, requiring TJ·d ≡ 0
+(mod scale_block) — enforced by ops.py.
+
+VMEM budget per step ≈ 16^d·TJ·TB·4 bytes for the LUT tile (d=3, TJ=12,
+TB=128 → 25 MB; ops.py sizes tiles to stay within ~8 MB by default).
+
+Validated bit-exactly against kernels/ref.py in interpret mode
+(tests/test_kernels.py sweeps shapes, dtypes, d, and tile sizes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lut as lut_mod
+
+
+def _kernel(idx_ref, x_ref, basis_ref, scale_ref, y_ref, *, d: int,
+            tj: int, scale_block: int, acc_dtype):
+    """One (b_tile, m_tile, j_tile) grid step."""
+    jstep = pl.program_id(2)
+
+    @pl.when(jstep == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # ---- produce: LUT tile in VMEM via one MXU dot ------------------------
+    # x block: (TJ*d, TB) -> chunks (TJ, d, TB); basis: (16^d, d)
+    tb = x_ref.shape[-1]
+    x_chunks = x_ref[...].reshape(tj, d, tb).astype(acc_dtype)
+    basis = basis_ref[...].astype(acc_dtype)  # (N, d)
+    # lut[n, j, b] = sum_r basis[n, r] * x_chunks[j, r, b]
+    lut = jax.lax.dot_general(
+        basis, x_chunks, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)  # (N, TJ, TB)
+
+    # ---- consume: gather-add from the VMEM LUT (paper Eq. 5) -------------
+    idx = idx_ref[...]  # (TM, TJ) packed 4d-bit codes == LUT row ids
+    cpb = scale_block // d  # chunks per scale block
+    acc = jnp.zeros((idx.shape[0], tb), acc_dtype)
+    for blk in range(tj // cpb):
+        part = jnp.zeros((idx.shape[0], tb), acc_dtype)
+        for c in range(cpb):
+            tjc = blk * cpb + c
+            part = part + jnp.take(lut[:, tjc, :], idx[:, tjc], axis=0)
+        # §3.3 factored scale: one multiply per bounding box
+        acc = acc + part * scale_ref[:, blk][:, None].astype(acc_dtype)
+    y_ref[...] += acc.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "scale_block", "tm", "tj", "tb", "interpret",
+                     "acc_dtype"),
+)
+def msgemm_pallas(
+    idx: jnp.ndarray,      # (m, kc) int32 packed LUT indices
+    x: jnp.ndarray,        # (k_pad = kc*d, b)
+    scales: jnp.ndarray,   # (m, kc*d // scale_block)
+    *,
+    d: int,
+    scale_block: int,
+    tm: int = 256,
+    tj: int | None = None,
+    tb: int = 128,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """y (m, b) = dequant(codes) @ x via the fused produce+consume kernel.
+
+    Caller (ops.py) guarantees: m % tm == 0, kc % tj == 0, b % tb == 0,
+    tj*d % scale_block == 0.
+    """
+    m, kc = idx.shape
+    k, b = x.shape
+    assert k == kc * d, (k, kc, d)
+    if tj is None:
+        tj = scale_block // d
+    assert (tj * d) % scale_block == 0, "factored-scale tiling (§3.3)"
+    assert m % tm == 0 and kc % tj == 0 and b % tb == 0, (m, kc, b, tm, tj, tb)
+    sj = tj * d // scale_block
+    basis = lut_mod.tuple_basis(d, dtype=acc_dtype)
+    n = basis.shape[0]
+
+    grid = (b // tb, m // tm, kc // tj)
+    kern = functools.partial(
+        _kernel, d=d, tj=tj, scale_block=scale_block, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tj), lambda ib, im, ij: (im, ij)),       # idx
+            pl.BlockSpec((tj * d, tb), lambda ib, im, ij: (ij, ib)),   # x
+            pl.BlockSpec((n, d), lambda ib, im, ij: (0, 0)),           # basis
+            pl.BlockSpec((tm, sj), lambda ib, im, ij: (im, ij)),       # scales
+        ],
+        out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ij: (im, ib)),
+        out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
+        interpret=interpret,
+    )(idx, x, basis, scales)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports).
+
+Every kernel in this package is validated with assert_allclose against
+these references across shape/dtype/tile sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut, packing
+
+
+def msgemm_ref(idx: jnp.ndarray, x: jnp.ndarray, scales: jnp.ndarray, *,
+               d: int, scale_block: int) -> jnp.ndarray:
+    """Oracle for kernels.msgemm.msgemm_pallas (paper Eq. 5 with §3.3 scales)."""
+    k = x.shape[0]
+    codes = packing.unpack_indices(idx, d, k)
+    table = lut.produce(x.astype(jnp.float32), d, dtype=jnp.float32)
+    return lut.consume(
+        table, idx, scales=scales, scale_block=scale_block, d=d)
+
+
+def int4_matmul_ref(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
+                    scale_block: int) -> jnp.ndarray:
+    """Oracle for kernels.int4_matmul: dequantize -> dense matmul."""
+    k = x.shape[0]
+    codes = packing.unpack_storage(u8, k).astype(jnp.int32)
+    vals = jnp.where(codes <= 7, codes, codes - 16).astype(jnp.float32)
+    q = jnp.repeat(scales, scale_block, axis=1)[:, :k].astype(jnp.float32)
+    w = vals * q
+    return w @ x.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Oracle for kernels.flash_attention: plain masked softmax attention.
+
+    q (BH, Sq, dh), k/v (BH, Skv, dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh**-0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Skv = s.shape[1], s.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

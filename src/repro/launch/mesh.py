@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; 'pod' is the DCN
+    axis (data-parallel only), 'model' stays intra-pod ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh (elastic re-scale, tests on host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_devices(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

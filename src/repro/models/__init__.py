@@ -1,0 +1,5 @@
+"""Raw-JAX model substrate: unified config, layers, MoE, Mamba, xLSTM,
+and the scan-over-layers transformer assembly."""
+
+from repro.models.config import ModelConfig, param_count  # noqa: F401
+from repro.models import transformer  # noqa: F401

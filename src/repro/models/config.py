@@ -1,0 +1,233 @@
+"""Unified architecture config covering all 10 assigned families.
+
+A model is a stack of ``num_layers`` blocks whose kinds repeat with period
+``len(block_pattern)`` — the scan-over-layers unit (compact HLO, fast SPMD
+compiles).  Block kinds:
+
+    'attn'    global self-attention + MLP           (dense transformers)
+    'local'   sliding-window self-attention + MLP   (gemma2 alternation)
+    'moe'     self-attention + MoE FFN              (llama4, qwen2-moe, ...)
+    'mamba'   Mamba-1 selective-scan block          (jamba)
+    'mamba_moe'  mamba block with MoE FFN           (jamba MoE layers)
+    'mlstm'   xLSTM matrix-memory block
+    'slstm'   xLSTM scalar-memory block
+
+Encoder-decoder (whisper) adds ``encoder_layers`` of bidirectional 'attn'
+blocks plus cross-attention in every decoder block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+from repro.core.linear import DENSE, QuantConfig
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 4096
+
+    # block layout
+    block_pattern: tuple[str, ...] = ("attn",)
+
+    # attention details
+    use_rope: bool = True  # whisper: absolute positions instead
+    rope_theta: float = 10000.0
+    attn_chunk: int = 4096  # q-chunked attention above this seq len
+    sliding_window: int = 0  # 'local' blocks attend to this window
+    attn_logit_softcap: float = 0.0  # gemma2: 50.0
+    final_logit_softcap: float = 0.0  # gemma2: 30.0
+    qk_norm: bool = False
+
+    # MLP
+    mlp_activation: str = "swiglu"  # swiglu | geglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    rms_offset: bool = False  # gemma: (1 + w) scaling
+    embed_scale: bool = False  # gemma: embeddings scaled by sqrt(d)
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (0 -> d_ff)
+    num_shared_experts: int = 0
+    shared_expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.0
+    moe_groups: int = 16  # dispatch groups (match the data-parallel degree)
+
+    # Mamba (jamba)
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_d_conv: int = 4
+    mamba_dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    mamba_chunk: int = 128
+
+    # xLSTM
+    xlstm_proj_factor: float = 2.0
+    slstm_mlp_factor: float = 4 / 3
+    xlstm_conv: int = 4
+    xlstm_chunk: int = 128
+    xlstm_parallel: bool = True  # chunkwise-parallel mLSTM (train path)
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    max_source_len: int = 0  # encoder positions (frames)
+
+    # modality frontend stubs (assignment: precomputed embeddings)
+    frontend: str = ""  # '' | 'audio_frames' | 'image_patches'
+    num_patches: int = 0  # vlm: patch tokens prepended to text
+
+    # numerics / execution
+    dtype: str = "float32"  # activation compute dtype
+    param_dtype: str = "float32"
+    # quantize the FSDP all-gather wire format to int8 (per-layer-group
+    # symmetric scale, dequantized after the gather) — halves the
+    # dominant train collective term at 400B scale (EXPERIMENTS.md §Perf)
+    fsdp_int8_gather: bool = False
+    # remat policy: save the per-group gathered weights from the forward
+    # pass so the backward does not re-all-gather them (collective -33%,
+    # memory +1 group of gathered params; EXPERIMENTS.md §Perf A)
+    save_gathered_weights: bool = False
+    quant: QuantConfig = field(default_factory=lambda: DENSE)
+    remat: bool = True
+    # 'nothing' recomputes the whole group in backward (min memory);
+    # 'dots' saves matmul outputs (no re-forward of the MXU work — trades
+    # ~EXEC/MODEL 0.75 -> 0.9 for per-group activation memory; §Perf A4)
+    remat_policy: str = "nothing"  # nothing | dots
+    scan_layers: bool = True
+    logical_rules: str = "default"  # distributed/sharding.py rule set
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_layers % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not a multiple of "
+                f"block_pattern period {len(self.block_pattern)}")
+        if self.num_heads % self.num_kv_heads != 0:
+            raise ValueError(f"{self.name}: heads must divide into kv groups")
+
+    # ------------------------------------------------------------------
+    @property
+    def num_groups(self) -> int:
+        """Scan length: how many times the block pattern repeats."""
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return not any(k in ("attn", "local", "moe") for k in self.block_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if sequence mixing is sub-quadratic (long_500k eligibility)."""
+        quad = {"attn", "local", "moe"}
+        # 'local' is linear in seq; a pattern is subquadratic iff no block
+        # kind does *global* quadratic attention over the full sequence.
+        # jamba's sparse 'attn' layers decode linearly -> special-cased by
+        # family ('hybrid'/'ssm' run long_500k per the assignment).
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_quant(self, mode: str, **kw) -> "ModelConfig":
+        return self.replace(quant=dataclasses.replace(self.quant, mode=mode, **kw))
+
+
+def param_count(cfg: ModelConfig) -> dict:
+    """Analytic parameter counts (total and active-per-token) — used for
+    MODEL_FLOPS in the roofline and verified against real init in tests."""
+    d, dff = cfg.d_model, cfg.d_ff
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    total = 0
+    active = 0
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    total += embed
+    active += embed
+
+    def attn_params():
+        return d * (h * dh) + 2 * d * (hk * dh) + (h * dh) * d
+
+    def mlp_params(ff):
+        mult = 3 if cfg.mlp_activation in ("swiglu", "geglu") else 2
+        return mult * d * ff
+
+    def mamba_params():
+        di, n, dr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
+        return (d * 2 * di + cfg.mamba_d_conv * di + di * (dr + 2 * n)
+                + dr * di + di * n + di + di * d)
+
+    def mlstm_params():
+        di = int(cfg.d_model * cfg.xlstm_proj_factor)
+        dh_ = di // cfg.num_heads
+        # up(2x) + block-diag q/k/v + scalar i/f gates + o gate + conv + down
+        return (d * 2 * di + 3 * cfg.num_heads * dh_ * dh_
+                + 2 * cfg.num_heads * di + d * di
+                + cfg.xlstm_conv * di + di * d)
+
+    def slstm_params():
+        mlp = int(d * cfg.slstm_mlp_factor)
+        # 4 gates x (input W + recurrent R) + GeGLU MLP
+        return 4 * (d * d + d * d) + 3 * d * mlp
+
+    for kind in cfg.block_pattern:
+        reps = cfg.num_groups
+        if kind in ("attn", "local"):
+            p = attn_params() + mlp_params(dff)
+            a = p
+        elif kind == "moe":
+            mdff = cfg.moe_d_ff or dff
+            routed = cfg.num_experts * mlp_params(mdff)
+            # shared experts fuse into one dense MLP of summed hidden dim
+            shared = (mlp_params(cfg.shared_expert_d_ff or
+                                 cfg.num_shared_experts * mdff)
+                      if cfg.num_shared_experts else 0)
+            router = d * cfg.num_experts
+            p = attn_params() + routed + shared + router
+            a = (attn_params() + router + shared
+                 + cfg.num_experts_per_tok * mlp_params(mdff))
+        elif kind == "mamba":
+            p = a = mamba_params() + mlp_params(dff)
+        elif kind == "mamba_moe":
+            mdff = cfg.moe_d_ff or dff
+            p = mamba_params() + cfg.num_experts * mlp_params(mdff) + d * cfg.num_experts
+            a = mamba_params() + cfg.num_experts_per_tok * mlp_params(mdff) + d * cfg.num_experts
+        elif kind == "mlstm":
+            p = a = mlstm_params()
+        elif kind == "slstm":
+            p = a = slstm_params()
+        else:
+            raise ValueError(kind)
+        total += p * reps
+        active += a * reps
+
+    if cfg.encoder_layers:
+        enc = cfg.encoder_layers * (attn_params() + mlp_params(dff))
+        # decoder cross-attention
+        dec_cross = cfg.num_layers * attn_params()
+        total += enc + dec_cross
+        active += enc + dec_cross
+    return {"total": total, "active": active}

@@ -1,0 +1,188 @@
+"""Attention (GQA/MQA, RoPE, sliding-window, soft-cap, cross-attn) with
+full-sequence and single-step-decode paths."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x (B, S, H, Dh), positions (B, S) -> rotated x."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attn_init(key, cfg, *, cross: bool = False) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.linear_init(ks[0], d, h * dh, cfg, cfg.quant),
+        "wk": common.linear_init(ks[1], d, hk * dh, cfg, cfg.quant),
+        "wv": common.linear_init(ks[2], d, hk * dh, cfg, cfg.quant),
+        "wo": common.linear_init(ks[3], h * dh, d, cfg, cfg.quant),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.norm_init(dh, "rmsnorm")
+        p["k_norm"] = common.norm_init(dh, "rmsnorm")
+    return p
+
+
+def _qkv(p, cfg, xq, xkv, positions_q, positions_kv, *, rope=True):
+    B = xq.shape[0]
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = common.linear_apply(p["wq"], xq, cfg.quant, in_dim=cfg.d_model)
+    k = common.linear_apply(p["wk"], xkv, cfg.quant, in_dim=cfg.d_model)
+    v = common.linear_apply(p["wv"], xkv, cfg.quant, in_dim=cfg.d_model)
+    q = q.reshape(B, -1, h, dh)
+    k = k.reshape(B, -1, hk, dh)
+    v = v.reshape(B, -1, hk, dh)
+    if cfg.qk_norm:
+        q = common.norm_apply(p["q_norm"], q, "rmsnorm")
+        k = common.norm_apply(p["k_norm"], k, "rmsnorm")
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kvheads", "head_dim")
+    v = constrain(v, "batch", "seq", "kvheads", "head_dim")
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask) -> jnp.ndarray:
+    """q (B,Sq,H,Dh), k/v (B,Skv,Hk,Dh), mask (B,1,Sq,Skv) bool or None."""
+    B, Sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(B, Sq, hk, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh**-0.5
+    logits = common.softcap(logits, cfg.attn_logit_softcap)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, Sq, h * dh).astype(q.dtype)
+    return out
+
+
+def causal_mask(Sq: int, Skv: int, *, window: int = 0, offset: int = 0
+                ) -> jnp.ndarray:
+    """(1, 1, Sq, Skv) bool; offset = start position of the query block."""
+    qpos = offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attn_apply(p, cfg, x, positions, *, window: int = 0,
+               mask: jnp.ndarray | None = None, causal: bool = True,
+               return_kv: bool = False):
+    """Full-sequence self-attention (train / prefill).
+
+    Above cfg.attn_chunk the query dim is processed in chunks via
+    lax.scan (flash-style row blocking, exact math): the (Sq, Skv) logits
+    block never exceeds (chunk, Skv) — this is what makes prefill_32k
+    lowerable without an O(S^2) footprint.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, x, positions, positions)
+    pm = mask[:, None, None, :] if mask is not None else None
+    C = cfg.attn_chunk
+    if C and S > C and S % C == 0:
+        nc = S // C
+        qs = jnp.moveaxis(q.reshape(B, nc, C, *q.shape[2:]), 1, 0)
+        offs = jnp.arange(nc) * C
+
+        def body(_, xs):
+            qc, off = xs
+            m = _chunk_mask(C, S, window, off) if causal else None
+            if pm is not None:
+                m = pm if m is None else (m & pm)
+            return None, _sdpa(cfg, qc, k, v, m)
+
+        _, outs = jax.lax.scan(body, None, (qs, offs))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, -1)
+    else:
+        m = causal_mask(S, S, window=window) if causal else None
+        if pm is not None:
+            m = pm if m is None else (m & pm)
+        out = _sdpa(cfg, q, k, v, m)
+    out = common.linear_apply(p["wo"], out, cfg.quant,
+                              in_dim=cfg.num_heads * cfg.head_dim)
+    out = constrain(out, "batch", "seq", "embed")
+    return (out, k, v) if return_kv else out
+
+
+def _chunk_mask(C: int, Skv: int, window: int, offset) -> jnp.ndarray:
+    """Traced-offset causal (+sliding window) mask for one q chunk."""
+    qpos = offset + jnp.arange(C)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
+    """Single-token decode. x (B, 1, d); cache (B, Skv, Hk, Dh); pos (B,).
+
+    Returns (out, new_k, new_v).  The KV cache is logically
+    ('batch','kv_seq','kvheads','head_dim') — on meshes where kv-heads
+    cannot shard, kv_seq takes the model axis (DESIGN.md §4).
+    """
+    q, k, v = _qkv(p, cfg, x, x, pos[:, None], pos[:, None])
+    B, Skv = cache_k.shape[0], cache_k.shape[1]
+    # where-based write: no arithmetic on the cache dtype, so quantized
+    # (f8) caches lower cleanly
+    mask = (jnp.arange(Skv)[None, :] == pos[:, None])[..., None, None]
+    new_k = jnp.where(mask, k.astype(cache_k.dtype), cache_k)
+    new_v = jnp.where(mask, v.astype(cache_v.dtype), cache_v)
+    new_k = constrain(new_k, "batch", "kv_seq", "kvheads", "head_dim")
+    new_v = constrain(new_v, "batch", "kv_seq", "kvheads", "head_dim")
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= pos[:, None]
+    if window:
+        m &= kpos > (pos[:, None] - window)
+    out = _sdpa(cfg, q, new_k, new_v, m[:, None, None, :])
+    out = common.linear_apply(p["wo"], out, cfg.quant,
+                              in_dim=cfg.num_heads * cfg.head_dim)
+    return out, new_k, new_v
+
+
+def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = common.linear_apply(p["wq"], x, cfg.quant, in_dim=cfg.d_model)
+    q = q.reshape(B, -1, h, dh)
+    out = _sdpa(cfg, q, enc_k, enc_v, None)
+    out = common.linear_apply(p["wo"], out, cfg.quant,
+                              in_dim=cfg.num_heads * cfg.head_dim)
+    return out
+
+
+def cross_kv(p, cfg, enc_out):
+    """Project encoder output once; cached for all decode steps."""
+    B = enc_out.shape[0]
+    hk, dh = cfg.num_kv_heads, cfg.head_dim
+    k = common.linear_apply(p["wk"], enc_out, cfg.quant, in_dim=cfg.d_model)
+    v = common.linear_apply(p["wv"], enc_out, cfg.quant, in_dim=cfg.d_model)
+    return k.reshape(B, -1, hk, dh), v.reshape(B, -1, hk, dh)

@@ -1,0 +1,133 @@
+"""Mamba-1 (S6 selective scan) block — jamba's sequence mixer.
+
+Training/prefill uses a chunked scan: ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, N) state, with a parallel
+``lax.associative_scan`` inside each chunk — the standard TPU-friendly
+two-level decomposition (compact HLO, work-efficient, state never
+materialized beyond one chunk).  Decode is the single-step recurrence with
+an SSM state + conv-tail cache (linear-time in sequence length — this is
+what makes jamba long_500k-eligible).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+
+
+def mamba_init(key, cfg) -> dict:
+    d, di, n, dr = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": common.linear_init(ks[0], d, 2 * di, cfg, cfg.quant),
+        "conv_w": common.truncated_normal(ks[1], (cfg.mamba_d_conv, di),
+                                          cfg.mamba_d_conv**-0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": common.linear_init(ks[2], di, dr + 2 * n, cfg, cfg.quant),
+        "dt_proj": {"w": common.truncated_normal(ks[3], (di, dr), dr**-0.5),
+                    "b": jnp.log(jnp.expm1(  # softplus^-1 of dt_init
+                        jnp.exp(jax.random.uniform(
+                            ks[4], (di,), minval=jnp.log(1e-3),
+                            maxval=jnp.log(1e-1))))).astype(jnp.float32)},
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": common.linear_init(ks[5], di, d, cfg, cfg.quant),
+    }
+    return p
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x (B, L, di), w (K, di); tail (B, K-1, di)."""
+    K = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+K-1, di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else pad[:, :0]
+    return out + b, new_tail
+
+
+def _ssm_params(p, cfg, xc):
+    """xc (B, L, di) -> dt (B,L,di), B/C (B,L,N)."""
+    n, dr = cfg.mamba_d_state, cfg.dt_rank
+    proj = common.linear_apply(p["x_proj"], xc, cfg.quant, in_dim=xc.shape[-1])
+    dtr, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dr, dr + n], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["dt_proj"]["w"].T + p["dt_proj"]["b"])
+    return dt, Bm, Cm
+
+
+def _scan_chunked(dA, dBu, C, h0, chunk):
+    """h_t = dA_t * h_{t-1} + dBu_t ; y_t = <C_t, h_t>.
+
+    dA/dBu (B, L, di, N), C (B, L, N).  Two-level scan (see module doc).
+    """
+    Bsz, L, di, N = dA.shape
+    nc = -(-L // chunk)
+    pad = nc * chunk - L
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBu = jnp.pad(dBu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(Bsz, nc, chunk, *t.shape[2:]), 1, 0)
+    dA_c, dBu_c, C_c = resh(dA), resh(dBu), resh(C)
+
+    def outer(h, xs):
+        a, b, c = xs  # (B, chunk, di, N) x2, (B, chunk, N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = b_cum + a_cum * h[:, None]  # (B, chunk, di, N)
+        y = jnp.einsum("bldn,bln->bld", h_all, c)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(outer, h0, (dA_c, dBu_c, C_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, nc * chunk, di)
+    return y[:, :L], h_last
+
+
+def mamba_apply(p, cfg, x, *, state=None):
+    """Full-sequence pass. x (B, L, d) -> (y, final_state)."""
+    di = cfg.mamba_d_inner
+    xz = common.linear_apply(p["in_proj"], x, cfg.quant, in_dim=cfg.d_model)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq", "mamba_inner")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_tail = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])  # (di, N)
+    xf = xc.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)  # (B, L, di, N)
+    dBu = (dt * xf)[..., None] * Bm[:, :, None, :]
+    h0 = (state["ssm"] if state is not None else
+          jnp.zeros((x.shape[0], di, cfg.mamba_d_state), jnp.float32))
+    y, h_last = _scan_chunked(dA, dBu, Cm, h0, cfg.mamba_chunk)
+    y = y + p["D"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = common.linear_apply(p["out_proj"], y, cfg.quant, in_dim=di)
+    return constrain(out, "batch", "seq", "embed"), {
+        "ssm": h_last, "conv": new_tail}
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-step decode. x (B, 1, d); state {'ssm','conv'}."""
+    y, new_state = mamba_apply(p, cfg, x, state=state)
+    return y, new_state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    di = cfg.mamba_d_inner
+    return {
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }

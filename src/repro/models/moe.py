@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-free
+dispatch (one-hot cumsum positions + scatter), shared experts, aux loss.
+
+Expert weights are stacked (E, d_ff, d) and shard over the 'expert'
+logical axis (EP) when E divides the model axis (llama4 128e, jamba 16e);
+otherwise the per-expert ffn dim shards (qwen2-moe 60e -> TP over
+mlp=1408).  Tokens cross from the data shards to the expert shards through
+the dispatch einsum — GSPMD materializes this as the MoE all-to-all, which
+the roofline's collective term picks up.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+
+
+def moe_init(key, cfg) -> dict:
+    d = cfg.d_model
+    mdff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp_activation in ("swiglu", "geglu")
+
+    def stack_init(k, in_dim, out_dim):
+        keys = jax.random.split(k, E)
+        return jax.vmap(
+            lambda kk: common.linear_init(kk, in_dim, out_dim, cfg, cfg.quant)
+        )(keys)
+
+    p = {
+        "router": {"w": common.truncated_normal(ks[0], (E, d), d**-0.5)},
+        "experts": {
+            "up": stack_init(jax.random.fold_in(ks[1], 0), d, mdff),
+            "down": stack_init(jax.random.fold_in(ks[1], 1), mdff, d),
+        },
+    }
+    if gated:
+        p["experts"]["gate"] = stack_init(jax.random.fold_in(ks[1], 2), d, mdff)
+    if cfg.num_shared_experts:
+        sdff = cfg.shared_expert_d_ff or cfg.num_shared_experts * mdff
+        p["shared"] = common.mlp_init(ks[2], cfg, sdff)
+    return p
+
+
+def _expert_ffn(pe: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x (E, C, d) -> (E, C, d) via per-expert (batched) QuantizedLinears.
+
+    Per-layer quant policy: experts run int4_dequant even in msgemm mode —
+    per-expert output dims (m = moe_d_ff) are below 16^d, so the LUT
+    produce phase cannot amortize (paper Eq. 15 / DESIGN.md §5), and each
+    expert would need its own LUT over its routed activations.
+    """
+    import dataclasses
+
+    q = cfg.quant
+    if q.mode == "msgemm":
+        q = dataclasses.replace(q, mode="int4_dequant")
+    apply_e = jax.vmap(lambda p, xx: common.linear_apply(p, xx, q,
+                                                         in_dim=x.shape[-1]))
+    up = apply_e(pe["up"], x)
+    act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
+           "gelu": jax.nn.gelu}[cfg.mlp_activation]
+    if "gate" in pe:
+        h = act(apply_e(pe["gate"], x)) * up
+    else:
+        h = act(up)
+    h = constrain(h, "expert", "capacity", "expert_out")
+    down = jax.vmap(lambda p, xx: common.linear_apply(p, xx, q,
+                                                      in_dim=h.shape[-1]))
+    return down(pe["down"], h)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg, *, capacity: int | None = None):
+    """x (B, S, d) -> (y (B, S, d), aux_metrics dict).
+
+    Switch-style capacity dispatch, *grouped by token shards*: tokens are
+    split into G contiguous groups (G = cfg.moe_groups, matched to the
+    data-parallel degree) and each group scatters into its own per-group
+    capacity slots.  The scatter/gather then vmaps over G, so GSPMD keeps
+    every dispatch operand sharded over the batch axis — an ungrouped
+    global scatter gets replicated by the partitioner (2.5 GB/device
+    operands at llama4 scale; see EXPERIMENTS.md §Perf).  Experts see a
+    (E, G*Cg, d) batch; tokens past their group's capacity are dropped
+    (residual passes through) — standard Switch semantics.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    # One dispatch group per example: B stays the (sharded) major dim and
+    # S is never merged with it, so every dispatch tensor keeps a
+    # GSPMD-representable sharding even when seq itself is model-sharded
+    # (llama4's sequence-parallel fallback).  Flattening (B,S,d)->(B*S,d)
+    # with seq sharded forces full replication (2.5 GB/device operands).
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32),
+                        p["router"]["w"])
+    gates, eidx = jax.lax.top_k(logits, K)  # (B, S, K)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    if capacity is None:
+        capacity = max(int(S * K / E * cfg.capacity_factor), 4)
+    C = capacity  # capacity per example
+
+    # position-in-expert via cumsum over each example's (S*K) slots
+    oh = jax.nn.one_hot(eidx.reshape(B, S * K), E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=1) - 1  # (B, S*K, E)
+    pos = jnp.sum(pos * oh, axis=-1)  # (B, S*K)
+    keep = pos < C
+    dest = jnp.where(keep, eidx.reshape(B, S * K) * C + pos, E * C)
+
+    xr = jnp.repeat(x, K, axis=1) if K > 1 else x  # (B, S*K, d)
+
+    def example_scatter(dest_b, x_b):
+        buf = jnp.zeros((E * C + 1, d), x_b.dtype)
+        return buf.at[dest_b].set(x_b, mode="drop")[:-1]
+
+    bufs = jax.vmap(example_scatter)(dest, xr)  # (B, E*C, d)
+    dispatched = (bufs.reshape(B, E, C, d).transpose(1, 0, 2, 3)
+                  .reshape(E, B * C, d))
+    dispatched = constrain(dispatched, "expert", "capacity", "expert_in")
+
+    out = _expert_ffn(p["experts"], dispatched, cfg)  # (E, B*C, d)
+    out = (out.reshape(E, B, C, d).transpose(1, 0, 2, 3)
+           .reshape(B, E * C, d))
+
+    def example_gather(out_b, dest_b):
+        padded = jnp.concatenate([out_b, jnp.zeros((1, d), out_b.dtype)], 0)
+        return jnp.take(padded, jnp.minimum(dest_b, E * C), axis=0)
+
+    gathered = jax.vmap(example_gather)(out, dest)  # (B, S*K, d)
+    gathered = gathered.reshape(B, S, K, d)
+    w = (gates * keep.reshape(B, S, K)).astype(gathered.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, w)
+
+    if "shared" in p:
+        y = y + common.mlp_apply(p["shared"], x, cfg).astype(y.dtype)
+
+    # Switch aux load-balancing loss terms
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(oh.reshape(B, S, K, E).sum(2).astype(jnp.float32),
+                  axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.astype(x.dtype), aux

@@ -1,0 +1,279 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, per-head C in
+R^{dh x dh}) and sLSTM (scalar memory with recurrent memory mixing), both
+with exponential gating + max-stabilizer state m.
+
+The recurrences run as ``lax.scan`` over time — exact semantics, compact
+HLO (one step body regardless of L), and the same step function drives
+single-token decode, which is the long_500k path (state size is
+O(H·dh^2) per layer, independent of sequence length).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+
+
+# =========================================================== mLSTM block
+def mlstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.xlstm_proj_factor)
+    H = cfg.num_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    bd = lambda k: common.truncated_normal(k, (H, dh, dh), dh**-0.5)
+    return {
+        "norm": common.norm_init(d, cfg.norm),
+        "xl_up": common.linear_init(ks[0], d, 2 * di, cfg, cfg.quant),
+        "xl_conv_w": common.truncated_normal(
+            ks[1], (cfg.xlstm_conv, di), cfg.xlstm_conv**-0.5),
+        "xl_conv_b": jnp.zeros((di,), jnp.float32),
+        # q/k/v are per-head block-diagonal (the xLSTM paper's layout)
+        "xl_q": {"w": bd(ks[2])},
+        "xl_k": {"w": bd(ks[3])},
+        "xl_v": {"w": bd(ks[4])},
+        # i~, f~ scalar gates per head (from the conv branch)
+        "xl_gates": {"w": common.truncated_normal(
+            ks[5], (2 * cfg.num_heads, di), di**-0.5),
+            "b": jnp.concatenate([jnp.zeros((cfg.num_heads,)),
+                                  3.0 * jnp.ones((cfg.num_heads,)),  # f bias
+                                  ]).astype(jnp.float32)},
+        # o gate per channel from the block input
+        "xl_o": common.linear_init(ks[7], d, di, cfg, cfg.quant),
+        "xl_down": common.linear_init(ks[6], di, d, cfg, cfg.quant),
+        "lskip": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _blockdiag(w, x, B, L, H, dh):
+    """x (B, L, di) -> per-head block-diagonal projection (B, L, H, dh)."""
+    xh = x.reshape(B, L, H, dh).astype(jnp.float32)
+    return jnp.einsum("blhd,hed->blhe", xh, w)
+
+
+def _mlstm_step(state, inp):
+    """Stabilized mLSTM recurrence (paper eqs. 19-27).
+
+    state: C (B,H,dh,dh), n (B,H,dh), m (B,H)
+    inp:   q,k,v (B,H,dh); i~, f~ (B,H)
+    """
+    C, n, m = state
+    q, k, v, it, ft = inp
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)[..., None]
+    f_p = jnp.exp(ft + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    # C/n are exp(-m)-stabilized, so the paper's max(|n.q|, 1) floor is
+    # exp(-m) in stabilized units
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_sequence(q, k, v, it, ft, state, *, chunk: int = 128):
+    """q/k/v (B, L, H, dh); it/ft (B, L, H).  Returns (h (B,L,H,dh), state).
+
+    Uses the chunk-checkpointed scan: the (B,H,dh,dh) matrix memory is
+    saved once per `chunk` steps for backward, not per step."""
+    L = q.shape[1]
+    pad = (-L) % chunk if L > chunk else 0
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, it, ft))
+    if pad:
+        xs = tuple(jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1))
+                   for t in xs)
+    state, hs = common.chunked_scan(_mlstm_step, state, xs, chunk=chunk)
+    return jnp.moveaxis(hs[:L], 0, 1), state
+
+
+def _mlstm_chunk_parallel(state, inp):
+    """One chunk of the *parallel* (attention-like) stabilized mLSTM.
+
+    state: C (B,H,dh,dh), n (B,H,dh), m (B,H) — absolute stabilizer.
+    inp:   q,k,v (B,W,H,dh); it,ft (B,W,H)  (ft already log-sigmoid).
+
+    Within the chunk, position t sees
+        h_t = [ exp(m0-a_t)·q_t C0  +  Σ_{s<=t} exp(g_s-a_t)(q_t·k_s) v_s ]
+              / max(|den_t|, exp(-m_t))
+    with b_t = Σ_{s<=t} f̃_s,  g_s = ĩ_s - b_s,
+    a_t = max(m0, cummax g),  m_t = b_t + a_t — algebraically identical to
+    the sequential recurrence (verified in tests to 1e-4), O(W²) parallel
+    work instead of W sequential steps.
+    """
+    C0, n0, m0 = state
+    q, k, v, it, ft = inp
+    B, W, H, dh = q.shape
+    b = jnp.cumsum(ft, axis=1)  # (B, W, H)
+    g = it - b
+    a = jnp.maximum(m0[:, None], jax.lax.cummax(g, axis=1))  # (B, W, H)
+    m = b + a
+
+    # intra-chunk: D[t, s] = exp(g_s - a_t), s <= t
+    decay = jnp.exp(g[:, None, :, :] - a[:, :, None, :])  # (B, t, s, H)
+    mask = jnp.tril(jnp.ones((W, W), bool))
+    decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)  # (B, t, s, H)
+    w_ts = qk * decay
+    num = jnp.einsum("btsh,bshd->bthd", w_ts, v)
+    den = jnp.sum(w_ts, axis=2)  # (B, t, H)
+
+    # inter-chunk: carried memory, decayed to position t.  C[i, j] = v_i k_j,
+    # retrieval contracts the k index: (C0 q)_i = sum_j C0[i, j] q_j.
+    scale0 = jnp.exp(m0[:, None] - a)  # (B, W, H)
+    num = num + jnp.einsum("bthd,bhed->bthe", q, C0) * scale0[..., None]
+    den = den + jnp.einsum("bthd,bhd->bth", q, n0) * scale0
+
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+    # carry to the next chunk (position W)
+    aW, bW = a[:, -1], b[:, -1]  # (B, H)
+    wk = jnp.exp(g - aW[:, None])  # (B, W, H)
+    C = (jnp.einsum("bshd,bshe,bsh->bhde", v, k, wk)
+         + jnp.exp(m0 - aW)[..., None, None] * C0)
+    n = (jnp.einsum("bshd,bsh->bhd", k, wk)
+         + jnp.exp(m0 - aW)[..., None] * n0)
+    return (C, n, bW + aW), h
+
+
+def mlstm_sequence_parallel(q, k, v, it, ft, state, *, chunk: int = 128):
+    """Chunkwise-parallel mLSTM: scan over chunks, O(W²) attention-like
+    math inside — the production training path (mLSTM paper's chunkwise
+    form).  Exactly equivalent to `mlstm_sequence` (tested)."""
+    B, L, H, dh = q.shape
+    W = min(chunk, L)
+    pad = (-L) % W
+    def prep(t):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return jnp.moveaxis(
+            t.reshape(B, (L + pad) // W, W, *t.shape[2:]), 1, 0)
+
+    xs = tuple(prep(t) for t in (q, k, v, it, ft))
+    fn = jax.checkpoint(_mlstm_chunk_parallel)
+    state, hs = jax.lax.scan(fn, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L + pad, H, dh)
+    return h[:, :L], state
+
+
+def mlstm_block_apply(p, cfg, x, *, state=None):
+    """x (B, L, d) -> (y, new_state)."""
+    B, L, d = x.shape
+    H = cfg.num_heads
+    di = int(d * cfg.xlstm_proj_factor)
+    dh = di // H
+    h_in = common.norm_apply(p["norm"], x, cfg.norm)
+    ab = common.linear_apply(p["xl_up"], h_in, cfg.quant, in_dim=d)
+    a, b = jnp.split(ab, 2, axis=-1)
+    a = constrain(a, "batch", "seq", "xl_inner")
+    from repro.models.mamba import _causal_conv  # shared depthwise conv
+
+    conv_state = state["conv"] if state is not None else None
+    ac, new_tail = _causal_conv(a, p["xl_conv_w"], p["xl_conv_b"], conv_state)
+    ac = jax.nn.silu(ac)
+    q = _blockdiag(p["xl_q"]["w"], ac, B, L, H, dh)
+    k = _blockdiag(p["xl_k"]["w"], ac, B, L, H, dh) * dh**-0.5
+    v = _blockdiag(p["xl_v"]["w"], a, B, L, H, dh)
+    gates = (ac.astype(jnp.float32) @ p["xl_gates"]["w"].T
+             + p["xl_gates"]["b"])
+    it = gates[..., :H]
+    ft = jax.nn.log_sigmoid(gates[..., H:])
+    o = jax.nn.sigmoid(common.linear_apply(p["xl_o"], h_in, cfg.quant,
+                                           in_dim=d).astype(jnp.float32))
+    st = (state["C"], state["n"], state["m"]) if state is not None else (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        -jnp.inf * jnp.ones((B, H), jnp.float32),
+    )
+    seq_fn = (mlstm_sequence_parallel if L > 1 and cfg.xlstm_parallel
+              else mlstm_sequence)
+    hseq, (C, n, m) = seq_fn(q, k, v, it, ft, st, chunk=cfg.xlstm_chunk)
+    hseq = hseq.reshape(B, L, di) * o
+    # learnable skip from the conv branch
+    hseq = (hseq + p["lskip"] * ac.astype(jnp.float32)).astype(x.dtype)
+    out = hseq * jax.nn.silu(b)
+    out = common.linear_apply(p["xl_down"], out, cfg.quant, in_dim=di)
+    return x + constrain(out, "batch", "seq", "embed"), {
+        "C": C, "n": n, "m": m, "conv": new_tail}
+
+
+def mlstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.xlstm_proj_factor)
+    H = cfg.num_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm_conv - 1, di), dtype),
+    }
+
+
+# =========================================================== sLSTM block
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    mlp_ff = int(d * cfg.slstm_mlp_factor)
+    return {
+        "norm": common.norm_init(d, cfg.norm),
+        "norm2": common.norm_init(d, cfg.norm),
+        "sl_w": {"w": common.truncated_normal(ks[0], (4 * d, d), d**-0.5),
+                 "b": jnp.concatenate([
+                     jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                     jnp.zeros((d,))]).astype(jnp.float32)},
+        "sl_r": {"w": common.truncated_normal(ks[1], (4 * d, d), d**-0.5)},
+        "mlp": common.mlp_init(ks[2], cfg.replace(mlp_activation="geglu"),
+                               mlp_ff),
+    }
+
+
+def _slstm_step(state, wx, R):
+    """state: (h, c, n, m) each (B, d); wx (B, 4d) precomputed W x_t + b."""
+    h, c, n, m = state
+    zifo = wx + h @ R.T  # memory mixing through the recurrent matrix
+    z, it, ft, o = jnp.split(zifo, 4, axis=-1)
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block_apply(p, cfg, x, *, state=None):
+    B, L, d = x.shape
+    xi = common.norm_apply(p["norm"], x, cfg.norm).astype(jnp.float32)
+    wx = xi @ p["sl_w"]["w"].T + p["sl_w"]["b"]  # (B, L, 4d)
+    st = (state["h"], state["c"], state["n"], state["m"]) if state else tuple(
+        jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, d), -jnp.inf, jnp.float32),)
+    R = p["sl_r"]["w"]
+
+    def step(s, wx_t):
+        return _slstm_step(s, wx_t, R)
+
+    wx_t = jnp.moveaxis(wx, 1, 0)
+    pad = (-L) % cfg.xlstm_chunk if L > cfg.xlstm_chunk else 0
+    if pad:
+        wx_t = jnp.pad(wx_t, ((0, pad), (0, 0), (0, 0)))
+    (h, c, n, m), hs = common.chunked_scan(step, st, wx_t,
+                                           chunk=cfg.xlstm_chunk)
+    y = jnp.moveaxis(hs[:L], 0, 1).astype(x.dtype)
+    x = x + y
+    x = x + common.mlp_apply(p["mlp"], common.norm_apply(p["norm2"], x, cfg.norm),
+                             cfg.replace(mlp_activation="geglu"))
+    return x, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}

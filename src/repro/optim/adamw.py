@@ -1,0 +1,109 @@
+"""AdamW with global-norm clipping — raw-JAX pytree implementation.
+
+Optimizer state shards exactly like the params (same logical axes), so the
+ZeRO-style 2D layout of DESIGN.md §4 applies to m/v as well; the dry-run's
+memory_analysis confirms the per-chip fit at 512 chips.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import schedules
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable = field(default_factory=lambda: schedules.constant(1e-3))
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # 'bfloat16' halves m/v bytes (400B-scale)
+
+
+def _trainable(path) -> bool:
+    """int4/packed leaves are frozen (inference-only quantized params)."""
+    leaf = getattr(path[-1], "key", "")
+    return leaf not in ("idx", "u8")
+
+
+def adamw_init(params, cfg: AdamWConfig | None = None) -> dict:
+    dt = jnp.dtype(cfg.state_dtype) if cfg is not None else jnp.float32
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+_SCAN_ABOVE = 2**24  # slice-process leaves above 16M elements
+
+
+def _scannable(x) -> bool:
+    return x.ndim >= 2 and x.size > _SCAN_ABOVE and x.shape[0] > 1
+
+
+def _sqsum(x):
+    # tree-reduction sum (accurate); f32 upcast inside — callers bound the
+    # temp footprint by passing slices of stacked leaves.
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    # stacked leaves reduce slice-by-slice (bounds f32 temporaries to one
+    # layer-group slice; a whole-leaf pass keeps full f32 copies live)
+    leaves = [jnp.sum(jax.lax.map(_sqsum, x)) if _scannable(x) else _sqsum(x)
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = cfg.lr(count)
+
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1**count.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2**count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m.astype(sdt), v.astype(sdt))
+
+    flat_g = jax.tree.leaves(grads)
+    new_p, new_m, new_v = [], [], []
+    treedef = jax.tree.structure(params)
+    for g, m, v, p in zip(flat_g, jax.tree.leaves(state["m"]),
+                          jax.tree.leaves(state["v"]),
+                          jax.tree.leaves(params)):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            np_, nm, nv = p, m, v  # frozen integer (quantized) leaves
+        elif _scannable(p):
+            # slice-wise update over the layer-stack dim: bounds the f32
+            # update temporaries to one group slice (llama4 expert leaves
+            # are GB-scale per device; whole-leaf updates keep several
+            # f32 copies live at once)
+            np_, nm, nv = jax.lax.map(lambda gmvp: upd(*gmvp), (g, m, v, p))
+        else:
+            np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unflat = lambda leaves: jax.tree.unflatten(treedef, leaves)
+    return unflat(new_p), {"m": unflat(new_m), "v": unflat(new_v),
+                           "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,1 @@
+from repro.quant.quantize import quantize_model  # noqa: F401

@@ -1,0 +1,49 @@
+"""Model-level weight quantization: walk a trained bf16/f32 param tree and
+convert every QuantizedLinear leaf to the target int4 format (msgemm or
+int4_dequant layout) — the train-dense / serve-quantized workflow of the
+paper (M in int4, activations in higher precision).
+
+Non-linear leaves (norms, embeddings, conv filters, recurrent R, A_log,
+gates...) stay in floating point: msGeMM targets GeMMs (paper §2); the
+embedding *lookup* is already a table read.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import linear as qlinear
+from repro.core.linear import QuantConfig
+from repro.models.config import ModelConfig
+
+# params dict keys that hold a QuantizedLinear (see sharding.LINEAR_AXES)
+QUANTIZABLE = {
+    "wq", "wk", "wv", "wo", "up", "gate", "down", "lm_head",
+    "in_proj", "x_proj", "out_proj",
+    "xl_up", "xl_o", "xl_down",
+}
+
+
+def _convert(w, quant: QuantConfig):
+    if w.ndim == 2:
+        return qlinear.from_dense(w, quant)
+    # stacked leading dims (scan groups / experts): vmap the conversion
+    return jax.vmap(lambda ww: _convert(ww, quant))(w)
+
+
+def quantize_model(params: dict, cfg: ModelConfig, quant: QuantConfig,
+                   *, path=()) -> dict:
+    """Return a new param tree for ``cfg.with_quant(quant.mode)`` serving."""
+    out = {}
+    for k, v in params.items():
+        if k in QUANTIZABLE and isinstance(v, dict) and "w" in v:
+            out[k] = _convert(v["w"], quant)
+        elif isinstance(v, dict):
+            out[k] = quantize_model(v, cfg, quant, path=path + (k,))
+        else:
+            out[k] = v
+    return out
+
+
+def quantized_size_bytes(params: dict) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

@@ -1,0 +1,1 @@
+from repro.runtime import serve, train  # noqa: F401

@@ -1,0 +1,89 @@
+"""Fault-tolerant training driver.
+
+Responsibilities (DESIGN.md §4):
+* auto-resume from the latest complete checkpoint (atomic manager),
+* periodic (optionally async) checkpointing,
+* straggler/hang watchdog wiring,
+* crash-injection hook for the restart integration test,
+* preemption-style graceful stop (save + exit) on request.
+
+The driver is mesh-agnostic: pass a jit'd step function and shardings;
+on restart with a different mesh the checkpoint re-shards elastically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.watchdog import Watchdog
+
+
+@dataclass
+class DriverConfig:
+    total_steps: int
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_save: bool = False
+    log_every: int = 10
+
+
+@dataclass
+class CrashInjector:
+    """Test hook: raises at a given step, once."""
+    at_step: int = -1
+    fired: bool = False
+
+    def maybe_crash(self, step: int):
+        if step == self.at_step and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected crash at step {step}")
+
+
+def run(state, step_fn: Callable, data, dcfg: DriverConfig, *,
+        shardings=None, crash: CrashInjector | None = None,
+        stop_flag: list | None = None, log: Callable = print) -> dict:
+    """Run (or resume) training.  Returns {'state', 'metrics', 'resumed_at'}."""
+    ckpt = CheckpointManager(dcfg.checkpoint_dir, keep=dcfg.keep,
+                             async_save=dcfg.async_save)
+    start = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state = ckpt.restore(latest, state, shardings=shardings)
+        start = latest
+        log(f"[driver] resumed from checkpoint step {latest}")
+    wd = Watchdog()
+    history = []
+    for step in range(start, dcfg.total_steps):
+        if stop_flag and stop_flag[0]:  # preemption signal
+            ckpt.save(step, state)
+            ckpt.wait()
+            log(f"[driver] preempted; saved at step {step}")
+            return {"state": state, "metrics": history, "resumed_at": start,
+                    "preempted": True}
+        batch = data.device_batch(step)
+        wd.step_started()
+        if crash is not None:
+            crash.maybe_crash(step)
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        info = wd.step_finished()
+        if (step + 1) % dcfg.log_every == 0 or step == start:
+            log(f"[driver] step {step + 1} loss={float(metrics['loss']):.4f} "
+                f"t={info['step_time'] * 1e3:.1f}ms"
+                + (" STRAGGLER" if info["straggler"] else ""))
+        history.append({"step": step + 1,
+                        "loss": float(metrics["loss"]),
+                        **{k: float(v) for k, v in metrics.items()
+                           if hasattr(v, "shape") and v.shape == ()}})
+        if (step + 1) % dcfg.checkpoint_every == 0 \
+                or step + 1 == dcfg.total_steps:
+            ckpt.save(step + 1, state)
+    ckpt.wait()
+    return {"state": state, "metrics": history, "resumed_at": start,
+            "preempted": False, "watchdog": {"stragglers": wd.straggler_count,
+                                             "hangs": wd.hang_count}}

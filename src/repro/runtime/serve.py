@@ -1,0 +1,76 @@
+"""Serving runtime: batched prefill + decode steps with quantized
+(msGeMM / int4) weights — the paper's target deployment.
+
+``prefill_step`` and ``decode_step`` are the units the dry-run lowers at
+scale; ``generate`` drives them for the runnable examples.  Quantized
+serving params come from quant.quantize_model (train in bf16, serve in
+int4/msgemm).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32):
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill_step(params, cfg: ModelConfig, batch: dict, cache):
+    """Prompt ingestion.  Returns (first sampled token logits, cache)."""
+    return transformer.prefill(params, cfg, batch, cache)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """One token for every sequence in the batch."""
+    return transformer.decode_step(params, cfg, token, cache, pos)
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, key, temperature: float = 1.0):
+    if temperature == 0.0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, batch: dict, *, max_new_tokens: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             key=None, cache_dtype=jnp.float32):
+    """Batched greedy/temperature generation (prefill + decode loop)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    extra = cfg.num_patches if cfg.frontend == "image_patches" else 0
+    max_len = max_len or (S + extra + max_new_tokens)
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    logits, cache = prefill_step(params, cfg, batch, cache)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = sample(logits, key, temperature)
+    pos0 = S + extra
+
+    def body(carry, i):
+        tok, cache, key = carry
+        key, sub = jax.random.split(key)
+        # tok was sampled for position pos0 + i; decode it there to get
+        # the logits of the next position
+        pos = jnp.full((tok.shape[0],), pos0, jnp.int32) + i
+        logits, cache = decode_step(params, cfg, tok, cache, pos)
+        nxt = sample(logits, sub, temperature)
+        return (nxt, cache, key), tok
+
+    (last, cache, _), toks = jax.lax.scan(
+        body, (tok, cache, key), jnp.arange(max_new_tokens - 1))
+    out = jnp.concatenate([jnp.moveaxis(toks, 0, 1), last[:, None]], axis=1)
+    return out
+
+
+def decode_positions(cfg: ModelConfig, batch: int, seq_len: int):
+    """Positions array for a decode_step at context length seq_len."""
+    return jnp.full((batch,), seq_len - 1, jnp.int32)

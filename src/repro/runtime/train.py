@@ -1,0 +1,109 @@
+"""Training step: loss, grad, optimizer — with microbatched gradient
+accumulation, remat (in the model's scanned blocks), optional int8
+cross-pod gradient compression via partial-auto shard_map.
+
+TrainState is a plain dict pytree: {'params', 'opt', 'step'} — shardable,
+checkpointable, elastic.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, compression
+
+IGNORE = -100  # label id excluded from the loss (e.g. vlm patch positions)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+    microbatches: int = 1  # gradient accumulation steps per train step
+    grad_accum_dtype: str = "float32"  # bfloat16 halves the grad buffer
+    z_loss: float = 1e-4
+    router_aux_weight: float = 0.01
+    # Cross-pod int8 gradient reduction (optim/compression.py) applies in
+    # manual-FSDP deployments via compressed_pmean_tree inside a shard_map
+    # over 'pod'; under GSPMD-auto training the pod all-reduce is
+    # compiler-inserted and not interceptable (see DESIGN.md §7 int8
+    # collective lessons) — the wire-format primitive is tested standalone.
+    grad_compression: str = "none"  # none | int8_pod (manual-FSDP only)
+
+
+def cross_entropy(logits, labels):
+    """Masked CE with z-loss.  logits (B,S,V) f32, labels (B,S) int."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    labels_safe = jnp.where(labels == IGNORE, 0, labels)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    zl = jnp.sum(jnp.square(lse) * mask) / denom
+    return jnp.sum(nll) / denom, zl
+
+
+def loss_fn(params, cfg: ModelConfig, tcfg: TrainConfig, batch: dict):
+    logits, aux = transformer.forward(params, cfg, batch)
+    ce, zl = cross_entropy(logits, batch["labels"])
+    loss = ce + tcfg.z_loss * zl
+    if cfg.num_experts:
+        loss = loss + tcfg.router_aux_weight * aux["load_balance"] / max(
+            sum(k in ("moe", "mamba_moe") for k in cfg.block_pattern)
+            * cfg.num_groups, 1)
+    metrics = {"ce": ce, "z_loss": zl, **aux}
+    return loss, metrics
+
+
+def _grads(params, cfg, tcfg, batch):
+    """Microbatched value_and_grad (lax.scan accumulation)."""
+    if tcfg.microbatches == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, tcfg, batch)
+        return loss, metrics, grads
+    A = tcfg.microbatches
+    adt = jnp.dtype(tcfg.grad_accum_dtype)
+    mb = jax.tree.map(
+        lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+    def step(acc, mbatch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, tcfg, mbatch)
+        acc_loss, acc_metrics, acc_grads = acc
+        return (acc_loss + loss / A,
+                jax.tree.map(lambda a, b: a + b / A, acc_metrics, metrics),
+                jax.tree.map(lambda a, b: (a + (b / A).astype(adt)),
+                             acc_grads, grads)), None
+
+    l0 = jnp.zeros((), jnp.float32)
+    m0 = {"ce": l0, "z_loss": l0, "load_balance": l0, "dropped_frac": l0}
+    g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, adt), params)
+    (loss, metrics, grads), _ = jax.lax.scan(step, (l0, m0, g0), mb)
+    return loss, metrics, grads
+
+
+def init_state(key, cfg: ModelConfig, tcfg: TrainConfig | None = None) -> dict:
+    params = transformer.init_params(key, cfg)
+    ocfg = tcfg.optimizer if tcfg is not None else None
+    return {"params": params, "opt": adamw_init(params, ocfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_step(state: dict, batch: dict, cfg: ModelConfig,
+               tcfg: TrainConfig) -> tuple[dict, dict]:
+    """One optimizer step.  Pure function of (state, batch) — jit/pjit it."""
+    loss, metrics, grads = _grads(state["params"], cfg, tcfg, batch)
+    params, opt, om = adamw_update(grads, state["opt"], state["params"],
+                                   tcfg.optimizer)
+    metrics = {"loss": loss, **metrics, **om}
+    return ({"params": params, "opt": opt, "step": state["step"] + 1},
+            metrics)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    return functools.partial(train_step, cfg=cfg, tcfg=tcfg)

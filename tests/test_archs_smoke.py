@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one train step on CPU, asserting output shapes and no NaNs.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct, no alloc) —
+here we verify full-config param math instead."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.models.config import param_count
+from repro.runtime import train as RT
+from repro.optim import AdamWConfig
+
+
+def _batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(ks[0], (B, 12, cfg.d_model))
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    elif cfg.frontend == "image_patches":
+        P = cfg.num_patches
+        batch["patch_embeds"] = jax.random.normal(ks[0], (B, P, cfg.d_model))
+        batch["tokens"] = jax.random.randint(ks[1], (B, S - P), 0,
+                                             cfg.vocab_size)
+        labels = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+        batch["labels"] = labels.at[:, :P].set(RT.IGNORE)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    assert cfg.block_pattern == configs.get_config(arch).block_pattern, \
+        "smoke config must keep the family block structure"
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+    state = RT.init_state(key, cfg)
+    logits, aux = T.forward(state["params"], cfg, batch)
+    B = batch["tokens"].shape[0]
+    S_total = batch["labels"].shape[1]
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    tcfg = RT.TrainConfig(optimizer=AdamWConfig())
+    step = jax.jit(functools.partial(RT.train_step, cfg=cfg, tcfg=tcfg))
+    new_state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0 and not bool(
+        jnp.isnan(metrics["loss"])), f"{arch}: bad loss"
+    # params actually changed
+    diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b)))
+                        if jnp.issubdtype(a.dtype, jnp.floating) else 0.0,
+                        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(diff)) > 0, f"{arch}: no param update"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config carries the exact assigned hyperparameters."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "llama4_maverick": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2_moe": (24, 2048, 16, 16, 1408, 151936),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51968),
+        "xlstm_1b3": (48, 2048, 4, 4, 0, 50304),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "codeqwen15_7b": (32, 4096, 32, 32, 13440, 92416),
+        "starcoder2_15b": (40, 6144, 48, 4, 24576, 49152),
+        "gemma2_9b": (42, 3584, 16, 8, 14336, 256000),
+        "jamba_v01": (32, 4096, 32, 8, 14336, 65536),
+        "phi3_vision": (32, 3072, 32, 32, 8192, 32064),
+        # the paper's own model (GPT-3, §5) — not in the assigned pool
+        "gpt3_175b": (96, 12288, 96, 96, 49152, 50304),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts land near the advertised model sizes."""
+    def total(arch):
+        return param_count(configs.get_config(arch))["total"]
+
+    assert 350e9 < total("llama4_maverick") < 500e9
+    assert 10e9 < total("qwen2_moe") < 20e9  # 14.3B total (2.7B active)
+    assert 0.25e9 < total("whisper_medium") < 1.0e9
+    assert 1.0e9 < total("xlstm_1b3") < 2.6e9
+    assert 1.8e9 < total("gemma_2b") < 3.4e9
+    assert 5e9 < total("codeqwen15_7b") < 9e9
+    assert 12e9 < total("starcoder2_15b") < 18e9
+    assert 7e9 < total("gemma2_9b") < 12e9
+    assert 40e9 < total("jamba_v01") < 65e9
+    assert 3e9 < total("phi3_vision") < 5e9
+    # MoE active-vs-total: llama4 ~17B active of ~400B total
+    pc = param_count(configs.get_config("llama4_maverick"))
+    assert pc["active"] < 0.12 * pc["total"]
+
+
+def test_smoke_decode_consistency_dense():
+    """Reduced gemma2 (alternating local/global): decode == forward."""
+    import numpy as np
+
+    cfg = configs.get_smoke("gemma2_9b")
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 10), 0, cfg.vocab_size)
+    full, _ = T.forward(params, cfg, {"tokens": toks})
+    cache = T.init_cache(cfg, 2, 16)
+    lg, cache = T.prefill(params, cfg, {"tokens": toks}, cache)
+    np.testing.assert_allclose(lg, full[:, -1], rtol=3e-4, atol=3e-4)
+    tok = jnp.argmax(lg, -1)
+    lg2, _ = T.decode_step(params, cfg, tok, cache, jnp.full((2,), 10))
+    full2, _ = T.forward(params, cfg, {"tokens": jnp.concatenate(
+        [toks, tok[:, None]], 1)})
+    np.testing.assert_allclose(lg2, full2[:, -1], rtol=3e-4, atol=3e-4)
+
+
+def test_scan_vs_unscanned_parity():
+    """scan_layers=True (production) and False (debug) are numerically
+    identical — the scan is purely an HLO-compactness choice."""
+    import numpy as np
+
+    cfg = configs.get_smoke("jamba_v01")  # heterogeneous pattern
+    params = T.init_params(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                              cfg.vocab_size)
+    l1, _ = T.forward(params, cfg, {"tokens": toks})
+    l2, _ = T.forward(params, cfg.replace(scan_layers=False),
+                      {"tokens": toks})
+    np.testing.assert_allclose(l1, l2, rtol=2e-5, atol=2e-5)
+
+
+def test_mlstm_chunkwise_parallel_equals_sequential():
+    """The production chunkwise-parallel mLSTM is exactly the sequential
+    recurrence (stabilizers included), for any chunking and carried state."""
+    import numpy as np
+    from repro.models import xlstm as X
+
+    key = jax.random.PRNGKey(7)
+    B, L, H, dh = 2, 37, 3, 8
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, L, H, dh))
+    k = jax.random.normal(ks[1], (B, L, H, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, L, H, dh))
+    it = jax.random.normal(ks[3], (B, L, H)) * 2
+    ft = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, L, H)) + 2)
+    st = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+          jnp.full((B, H), -jnp.inf))
+    h_seq, (C1, n1, m1) = X.mlstm_sequence(q, k, v, it, ft, st, chunk=64)
+    for W in (4, 8, 37):
+        h_par, (C2, n2, m2) = X.mlstm_sequence_parallel(
+            q, k, v, it, ft, st, chunk=W)
+        np.testing.assert_allclose(h_par, h_seq, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(C2, C1, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(m2, m1, rtol=2e-5, atol=2e-5)
+    # carried-state continuation (mid-sequence chunk boundary)
+    _, st_mid = X.mlstm_sequence(q[:, :20], k[:, :20], v[:, :20],
+                                 it[:, :20], ft[:, :20], st)
+    h_cont, _ = X.mlstm_sequence_parallel(q[:, 20:], k[:, 20:], v[:, 20:],
+                                          it[:, 20:], ft[:, 20:], st_mid,
+                                          chunk=8)
+    np.testing.assert_allclose(h_cont, h_seq[:, 20:], rtol=2e-4, atol=2e-4)

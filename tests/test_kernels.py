@@ -1,0 +1,155 @@
+"""Pallas kernel validation: interpret-mode allclose vs pure-jnp oracles,
+swept over shapes, d, scale blocks, tile sizes, and dtypes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing, scales as scales_mod
+from repro.kernels import ops, ref
+from repro.kernels.msgemm import msgemm_pallas
+from repro.kernels.int4_matmul import int4_matmul_pallas
+
+
+def _mk(rng, m, k, b, scale_block):
+    codes = jnp.asarray(rng.integers(0, 16, size=(m, k)), jnp.uint8)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    sc = jnp.asarray(
+        np.abs(rng.standard_normal((m, -(-k // scale_block)))) + 0.1,
+        jnp.float32)
+    return codes, x, sc
+
+
+# ------------------------------------------------------------- msgemm kernel
+@pytest.mark.parametrize("d", [1, 2, 3])
+@pytest.mark.parametrize("m,k,b", [(8, 12, 4), (16, 36, 8), (32, 72, 16),
+                                   (128, 144, 128)])
+def test_msgemm_kernel_vs_ref(d, m, k, b):
+    scale_block = 6 * d  # multiple of every d in the sweep
+    if k % scale_block:
+        k = -(-k // scale_block) * scale_block
+    rng = np.random.default_rng(d * 1000 + m + k + b)
+    codes, x, sc = _mk(rng, m, k, b, scale_block)
+    got = ops.msgemm(codes, x, d, scales=sc, scale_block=scale_block)
+    idx = packing.pack_indices(codes, d)
+    want = ref.msgemm_ref(idx, x, sc, d=d, scale_block=scale_block)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("tm,tj,tb", [(8, 2, 8), (16, 4, 16), (8, 8, 32)])
+def test_msgemm_kernel_tiling_invariance(tm, tj, tb):
+    d, scale_block = 2, 4
+    m, kc, b = 16, 8, 32
+    rng = np.random.default_rng(42)
+    codes, x, sc = _mk(rng, m, kc * d, b, scale_block)
+    idx = packing.pack_indices(codes, d)
+    got = msgemm_pallas(idx, x, sc, d=d, scale_block=scale_block,
+                        tm=tm, tj=tj, tb=tb, interpret=True)
+    want = ref.msgemm_ref(idx, x, sc, d=d, scale_block=scale_block)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_msgemm_kernel_unpadded_shapes():
+    """Wrapper pads ragged (m, k, b) transparently."""
+    d, scale_block = 3, 6
+    rng = np.random.default_rng(7)
+    codes, x, sc = _mk(rng, 13, 30, 5, scale_block)
+    got = ops.msgemm(codes, x, d, scales=sc, scale_block=scale_block)
+    idx = packing.pack_indices(codes, d)
+    want = ref.msgemm_ref(idx, x, sc, d=d, scale_block=scale_block)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_msgemm_kernel_matches_quantized_dense():
+    """End-to-end: quantize real weights, kernel == dequant @ x."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((32, 72)), jnp.float32)
+    qt = scales_mod.quantize_int4(w, block=12)
+    x = jnp.asarray(rng.standard_normal((72, 16)), jnp.float32)
+    got = ops.msgemm(qt.codes, x, 3, scales=qt.scales, scale_block=12)
+    want = scales_mod.dequantize(qt) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_msgemm_kernel_vector_x():
+    rng = np.random.default_rng(1)
+    codes, x, sc = _mk(rng, 8, 12, 1, 6)
+    got = ops.msgemm(codes, x[:, 0], 3, scales=sc, scale_block=6)
+    assert got.shape == (8,)
+    want = ref.msgemm_ref(packing.pack_indices(codes, 3), x, sc,
+                          d=3, scale_block=6)[:, 0]
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------- int4_matmul kernel
+@pytest.mark.parametrize("m,k,b", [(8, 32, 4), (16, 64, 8), (64, 128, 128),
+                                   (13, 40, 5)])
+def test_int4_matmul_vs_ref(m, k, b):
+    scale_block = 8
+    rng = np.random.default_rng(m * 7 + k + b)
+    codes, x, sc = _mk(rng, m, k, b, scale_block)
+    u8 = packing.pack_storage(codes)
+    got = ops.int4_matmul(u8, sc, x, scale_block=scale_block)
+    want = ref.int4_matmul_ref(u8, sc, x, scale_block=scale_block)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_int4_vs_msgemm_same_result():
+    """Both kernels compute the same quantized GeMM (different algorithms)."""
+    rng = np.random.default_rng(5)
+    scale_block = 12
+    codes, x, sc = _mk(rng, 24, 48, 8, scale_block)
+    y1 = ops.msgemm(codes, x, 3, scales=sc, scale_block=scale_block)
+    y2 = ops.int4_matmul(packing.pack_storage(codes), sc, x,
+                         scale_block=scale_block)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_activation_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    codes, x, sc = _mk(rng, 16, 24, 8, 12)
+    got = ops.msgemm(codes, x.astype(dtype), 3, scales=sc, scale_block=12)
+    want = ref.msgemm_ref(packing.pack_indices(codes, 3),
+                          x.astype(dtype).astype(jnp.float32), sc,
+                          d=3, scale_block=12)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------- flash attention
+@pytest.mark.parametrize("Sq,Skv,H,Hk,dh", [(32, 32, 4, 4, 16),
+                                            (48, 48, 4, 2, 16),
+                                            (40, 40, 2, 1, 8)])
+@pytest.mark.parametrize("kwargs", [dict(causal=True),
+                                    dict(causal=True, window=16),
+                                    dict(causal=True, softcap=30.0)])
+def test_flash_attention_vs_ref(Sq, Skv, H, Hk, dh, kwargs):
+    B = 2
+    key = jax.random.PRNGKey(Sq + H)
+    q = jax.random.normal(key, (B, Sq, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Skv, Hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Skv, Hk, dh))
+    got = ops.flash_attention(q, k, v, **kwargs)
+    kr, vr = (jnp.repeat(t, H // Hk, axis=2) for t in (k, v))
+    flat = lambda t: jnp.moveaxis(t, 2, 1).reshape(B * H, t.shape[1], dh)
+    want = ref.flash_attention_ref(flat(q), flat(kr), flat(vr), **kwargs)
+    want = jnp.moveaxis(want.reshape(B, H, Sq, dh), 1, 2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """Kernel agrees with the model's jnp attention path end to end."""
+    from repro.models import layers
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=2,
+                      d_ff=64, vocab_size=97)
+    B, S, dh = 2, 24, cfg.head_dim
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, 4, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, 2, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, 2, dh))
+    want = layers._sdpa(cfg, q, k, v, layers.causal_mask(S, S))
+    got = ops.flash_attention(q, k, v, causal=True).reshape(B, S, -1)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,251 @@
+"""Core msGeMM correctness: packing round-trips, bit-exactness vs dense,
+complexity formulas vs instrumented counts, §3.3 scale rules, hypothesis
+property tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import complexity, linear, lut, packing, scales
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_codes(rng, m, k):
+    return jnp.asarray(rng.integers(0, 16, size=(m, k)), jnp.uint8)
+
+
+# ------------------------------------------------------------------ packing
+def test_b_roundtrip():
+    vals = packing.b_values()
+    codes = packing.b_hat(vals)
+    assert np.array_equal(np.asarray(codes), np.arange(16))
+    assert vals[0b0000] == 0 and vals[0b0111] == 7
+    assert vals[0b1000] == -8 and vals[0b1111] == -1  # paper §3.1 examples
+
+
+@pytest.mark.parametrize("k", [4, 7, 16, 33])
+def test_storage_roundtrip(k):
+    rng = np.random.default_rng(0)
+    c = rand_codes(rng, 5, k)
+    assert np.array_equal(packing.unpack_storage(packing.pack_storage(c), k), c)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+@pytest.mark.parametrize("k", [6, 12, 13])
+def test_index_roundtrip(d, k):
+    rng = np.random.default_rng(d * 100 + k)
+    c = rand_codes(rng, 4, k)
+    idx = packing.pack_indices(c, d)
+    assert idx.shape == (4, -(-k // d))
+    assert np.array_equal(packing.unpack_indices(idx, d, k), c)
+
+
+def test_d2_byte_is_index():
+    """For d=2 the storage byte IS the LUT index (TPU fast path)."""
+    rng = np.random.default_rng(3)
+    c = rand_codes(rng, 8, 10)
+    u8 = packing.pack_storage(c)
+    assert np.array_equal(
+        packing.indices_from_storage(u8, 2, 10), packing.pack_indices(c, 2))
+
+
+# ------------------------------------------------------------------ lut
+def test_paper_running_example():
+    """§3.2: M(0,:) = {2,4,3,5}  =>  y(0) = L(0010,0100,0) + L(0011,0101,1)."""
+    x = jnp.asarray([1.5, -2.0, 0.25, 3.0])
+    codes = packing.b_hat(jnp.asarray([[2, 4, 3, 5]]))
+    table = lut.produce(x[:, None], d=2)  # (256, 2, 1)
+    idx_blue_red = 0b0010_0100
+    idx_2 = 0b0011_0101
+    y = table[idx_blue_red, 0, 0] + table[idx_2, 1, 0]
+    expected = 2 * 1.5 + 4 * -2.0 + 3 * 0.25 + 5 * 3.0
+    np.testing.assert_allclose(y, expected, rtol=1e-6)
+    got = lut.msgemm(codes, x, d=2)
+    np.testing.assert_allclose(got, [expected], rtol=1e-6)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+@pytest.mark.parametrize("m,k,b", [(3, 6, 1), (16, 12, 4), (9, 13, 2), (1, 24, 7)])
+def test_msgemm_matches_dense(d, m, k, b):
+    rng = np.random.default_rng(d + m + k)
+    codes = rand_codes(rng, m, k)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    got = lut.msgemm(codes, x, d=d)
+    want = lut.msgemm_reference(codes, x, d=d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_msgemm_exact_on_integers():
+    """Integer activations => float ops are exact => bitwise equality."""
+    rng = np.random.default_rng(7)
+    codes = rand_codes(rng, 32, 24)
+    x = jnp.asarray(rng.integers(-50, 50, size=(24, 3)), jnp.float32)
+    got = lut.msgemm(codes, x, d=3)
+    want = lut.msgemm_reference(codes, x, d=3)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 4])
+def test_consume_chunking_invariant(chunk):
+    rng = np.random.default_rng(11)
+    codes = rand_codes(rng, 8, 18)
+    x = jnp.asarray(rng.standard_normal((18, 2)), jnp.float32)
+    base = lut.msgemm(codes, x, d=3, chunk=1)
+    got = lut.msgemm(codes, x, d=3, chunk=chunk)
+    np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 12), kc=st.integers(1, 6), b=st.integers(1, 4),
+    d=st.integers(1, 3), seed=st.integers(0, 2**31 - 1),
+)
+def test_property_msgemm_equals_dense(m, kc, b, d, seed):
+    """Property: for ALL int4 M and real X, msGeMM(M, X) == M @ X (Eq. 5)."""
+    rng = np.random.default_rng(seed)
+    k = kc * d
+    codes = rand_codes(rng, m, k)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    got = lut.msgemm(codes, x, d=d)
+    want = lut.msgemm_reference(codes, x, d=d)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_property_linearity(d, seed):
+    """LUT linearity (§4.1): msgemm(M, a*x) == a * msgemm(M, x)."""
+    rng = np.random.default_rng(seed)
+    codes = rand_codes(rng, 6, 6 * d)
+    x = jnp.asarray(rng.standard_normal((6 * d, 2)), jnp.float32)
+    y1 = lut.msgemm(codes, 2.5 * x, d=d)
+    y2 = 2.5 * lut.msgemm(codes, x, d=d)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ scales
+def test_scale_rules():
+    scales.check_applicable(6, 3)  # r multiple of d: ok
+    with pytest.raises(ValueError):
+        scales.check_applicable(4, 3)  # r not multiple of d
+    with pytest.raises(ValueError):
+        scales.check_applicable(2, 3)  # r < d
+    with pytest.raises(ValueError):
+        scales.check_applicable(6, 3, axis="column")  # §3.3 column boxes
+
+
+@pytest.mark.parametrize("power_of_two", [False, True])
+def test_quantize_dequantize(power_of_two):
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((16, 48)), jnp.float32)
+    qt = scales.quantize_int4(w, block=12, power_of_two=power_of_two)
+    err = scales.quantization_error(w, qt)
+    # symmetric int4 (amax -> +-7): error <= scale/2; pow2 scales <= 2x scale
+    amax = float(jnp.max(jnp.abs(w)))
+    assert float(err) <= amax / 7 * (1.0 if power_of_two else 0.5) + 1e-6
+
+
+def test_msgemm_with_scales_matches_dequant_dense():
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.standard_normal((24, 36)), jnp.float32)
+    qt = scales.quantize_int4(w, block=12)
+    x = jnp.asarray(rng.standard_normal((36, 5)), jnp.float32)
+    got = lut.msgemm(qt.codes, x, d=3, scales=qt.scales, scale_block=12)
+    want = scales.dequantize(qt) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ linear
+@pytest.mark.parametrize("mode", ["bf16", "int4_dequant", "msgemm"])
+@pytest.mark.parametrize("storage", ["packed_idx", "packed_u8"])
+def test_linear_modes_agree(mode, storage):
+    cfg = linear.QuantConfig(mode=mode, d=3, scale_block=12, storage=storage)
+    key = jax.random.PRNGKey(0)
+    p_dense = linear.init(key, 24, 16, linear.DENSE)
+    p = linear.from_dense(p_dense["w"], cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 24))
+    y = linear.apply(p, x, cfg, in_dim=24)
+    y_ref = linear.apply(p_dense, x, linear.DENSE)
+    assert y.shape == (2, 5, 16)
+    # quantized paths approximate the dense weight; both quant modes must
+    # agree with the *dequantized* weight tightly.
+    if mode == "bf16":
+        np.testing.assert_allclose(y, y_ref, rtol=1e-5)
+    else:
+        qt = scales.quantize_int4(p_dense["w"], 12)
+        y_dq = x @ scales.dequantize(qt).T
+        np.testing.assert_allclose(y, y_dq, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ complexity
+@pytest.mark.parametrize("d", [1, 2])
+@pytest.mark.parametrize("m,k,b", [(4, 4, 1), (6, 8, 2)])
+def test_complexity_formulas_match_instrumented_counts(d, m, k, b):
+    rng = np.random.default_rng(d * 10 + m)
+    codes = np.asarray(rand_codes(rng, m, k))
+    x = rng.standard_normal((k, b))
+    y, counts = complexity.counted_msgemm(codes, x, d)
+    assert counts.fma == complexity.c_lut(k, d) * b          # Eq. 7
+    assert counts.add == complexity.c_consume(m, k, d) * b   # Eq. 9
+    assert counts.mem == complexity.m_msgemm(m, k, b)        # Eq. 12
+    assert counts.total_compute <= complexity.c_msgemm(m, k, b, d)
+    want = lut.msgemm_reference(jnp.asarray(codes), jnp.asarray(x, jnp.float32), d)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+    _, gcounts = complexity.counted_gemm(rng.standard_normal((m, k)), x)
+    assert gcounts.fma == complexity.c_gemm(m, k, b)         # Eq. 14
+    assert gcounts.mem == complexity.m_gemm(m, k, b)
+
+
+def test_paper_fig3_sweet_spot():
+    """§5 / Fig. 3, reproduced from the paper's own Eqs. 18 & 21.
+
+    Eq. 21 (MLP2, m=49152): d=3 -> 2.40 ("~2.5x" claim: holds).
+    Eq. 18 (MLP1, m=12288): d=3 -> 1.50 — the figure's "~2.5x for BOTH"
+    claim is inconsistent with Eq. 18; it matches only the large-m
+    orientation, in line with the paper's own "the larger the number of
+    rows (m) the better" observation.  EXPERIMENTS.md §Claims records this.
+    """
+    mlp1 = complexity.speedup(12288, 49152, d=3)
+    mlp2 = complexity.speedup(49152, 12288, d=3)
+    np.testing.assert_allclose(mlp1, 49152 / (2**12 * 4 + 49152 // 3 - 1))  # Eq.18
+    np.testing.assert_allclose(mlp2, 49152 / (2**12 + (12288 // 3 - 1) * 4))  # Eq.21
+    assert 2.3 < mlp2 < 2.7, mlp2  # the ~2.5x sweet spot
+    assert 1.4 < mlp1 < 2.0, mlp1
+    d2, _ = complexity.best_d(49152, 12288)
+    assert d2 == 3  # d=3 is MLP2's sweet spot (Fig. 3)
+    # paper: "the larger m the better ... cost of the look-up table is
+    # independent of m"
+    assert complexity.speedup(4 * 12288, 49152, d=3) > mlp1
+    # d=5+ collapses (exponential LUT cost, §5: "d cannot be larger than 4")
+    assert complexity.speedup(12288, 49152, d=5) < 1.0
+    assert complexity.speedup(49152, 12288, d=5) < 1.0
+
+
+# ------------------------------------------------------- adaptive depth
+def test_adaptive_depth_resolution():
+    """'adaptive' d picks the per-linear argmax of Eq. 15 (beyond-paper)."""
+    cfg = linear.QuantConfig(mode="msgemm", d="adaptive")
+    assert cfg.scale_block == 12
+    # lm_head-like (m >> 16^d): deep LUT wins
+    assert cfg.resolve_d(2048, 256000) >= 3
+    # square projection (m ~ 16^3): shallow LUT
+    assert cfg.resolve_d(5120, 5120) == 2
+
+
+@pytest.mark.parametrize("storage", ["packed_idx", "packed_u8"])
+def test_adaptive_depth_linear_matches_dequant(storage):
+    cfg = linear.QuantConfig(mode="msgemm", d="adaptive", storage=storage)
+    key = jax.random.PRNGKey(0)
+    p_dense = linear.init(key, 24, 4200, linear.DENSE)  # big-m head
+    p = linear.from_dense(p_dense["w"], cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 24))
+    y = linear.apply(p, x, cfg, in_dim=24)
+    qt = scales.quantize_int4(p_dense["w"], cfg.scale_block)
+    want = x @ scales.dequantize(qt).T
+    np.testing.assert_allclose(y, want, rtol=3e-4, atol=3e-4)
+    if storage == "packed_idx":
+        d_used = cfg.resolve_d(24, 4200)
+        assert p["idx"].shape[1] == -(-24 // d_used)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants beyond the core
+algorithm: packing bijectivity, quantization bounds, sharding-rule
+well-formedness, checkpoint round-trips, schedule monotonicity."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.core import packing, scales
+from repro.distributed import sharding as shd
+from repro.optim import schedules
+
+
+class FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 8), k=st.integers(1, 40), d=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_indices_bijective(m, k, d, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(m, k)).astype(np.uint8)
+    idx = packing.pack_indices(jnp.asarray(codes), d)
+    back = packing.unpack_indices(idx, d, k)
+    assert np.array_equal(np.asarray(back), codes)
+    assert int(jnp.max(idx)) < 16**d  # valid LUT rows
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 6), k=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_storage_packing_bijective(m, k, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(m, k)).astype(np.uint8)
+    u8 = packing.pack_storage(jnp.asarray(codes))
+    assert u8.shape[1] == -(-k // 2)  # true 4-bit storage
+    assert np.array_equal(
+        np.asarray(packing.unpack_storage(u8, k)), codes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 6), k=st.integers(2, 40),
+       block=st.sampled_from([2, 4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_quantization_error_bound(m, k, block, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((m, k)) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    qt = scales.quantize_int4(w, block=block)
+    err = np.asarray(jnp.abs(w - scales.dequantize(qt)))
+    # per-block bound: half a quantization step of that block's scale
+    wb = np.asarray(jnp.pad(w, ((0, 0), (0, qt.scales.shape[1] * block - k)))
+                    ).reshape(m, -1, block)
+    bound = np.abs(wb).max(-1) / 7 * 0.5 + 1e-6
+    errb = np.pad(err, ((0, 0), (0, qt.scales.shape[1] * block - k))
+                  ).reshape(m, -1, block).max(-1)
+    assert (errb <= bound + 1e-6).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    names=st.lists(st.sampled_from(
+        ["batch", "seq", "heads", "kvheads", "mlp", "vocab", "embed",
+         "expert", "expert_out", "capacity", "none", "layers"]),
+        min_size=1, max_size=5),
+    dims=st.lists(st.sampled_from([1, 3, 16, 40, 48, 60, 128, 256, 4096]),
+                  min_size=5, max_size=5),
+)
+def test_sharding_resolution_wellformed(names, dims):
+    """For ANY logical axes and shape: no mesh axis used twice, and every
+    assigned axis divides its dim."""
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    shape = tuple(dims[: len(names)])
+    for kind in (0, 1):
+        spec = shd._resolve(tuple(names), shape, mesh,
+                            shd.RULE_SETS["default"][kind])
+        used = []
+        for i, e in enumerate(spec):
+            if e is None:
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            total = 1
+            for a in axes:
+                used.append(a)
+                total *= mesh.shape[a]
+            assert shape[i] % total == 0, (names, shape, spec)
+        assert len(used) == len(set(used)), (names, shape, spec)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                min_size=1, max_size=4),
+       st.integers(0, 2**31 - 1))
+def test_checkpoint_roundtrip_arbitrary_trees(shapes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"leaf{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, tree)
+        back = mgr.restore(1, tree)
+        for k in tree:
+            np.testing.assert_array_equal(back[k], tree[k])
+
+
+@settings(max_examples=20, deadline=None)
+@given(peak=st.floats(1e-5, 10), warm=st.integers(1, 50),
+       total=st.integers(60, 500))
+def test_warmup_cosine_properties(peak, warm, total):
+    fn = schedules.warmup_cosine(peak, warm, total)
+    assert float(fn(0)) == 0.0
+    assert abs(float(fn(warm)) - peak) < peak * 1e-5 + 1e-9
+    # never exceeds peak, never below final fraction after warmup
+    for s in (warm, (warm + total) // 2, total):
+        v = float(fn(s))
+        assert v <= peak * (1 + 1e-6)
+        assert v >= peak * 0.1 * (1 - 1e-6)

@@ -1,0 +1,274 @@
+"""Substrate tests: data determinism, optimizer, schedules, compression,
+checkpoint atomicity/restart/elastic, watchdog, driver crash recovery."""
+
+import functools
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticStream
+from repro.distributed.watchdog import Watchdog
+from repro.models.config import ModelConfig
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, compression,
+                         schedules)
+from repro.optim.adamw import global_norm
+from repro.runtime import train as RT
+from repro.runtime.driver import CrashInjector, DriverConfig, run
+
+TINY = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+                   d_ff=64, vocab_size=257, max_seq_len=64)
+
+
+# ----------------------------------------------------------------- data
+def test_data_deterministic_random_access():
+    cfg = DataConfig(vocab_size=257, seq_len=17, global_batch=4, seed=3)
+    s = SyntheticStream(cfg)
+    b1, b2 = s.host_batch(5), s.host_batch(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], s.host_batch(6)["tokens"])
+    # labels are next-token shifted
+    full1 = s.host_batch(5)
+    assert np.array_equal(b1["labels"][:, :-1], full1["tokens"][:, 1:])
+
+
+def test_data_prefetch_matches_direct():
+    s = SyntheticStream(DataConfig(vocab_size=97, seq_len=9, global_batch=2))
+    gen = s.prefetch(start_step=3)
+    step, batch = next(gen)
+    assert step == 3
+    assert np.array_equal(batch["tokens"], s.host_batch(3)["tokens"])
+    gen.close()
+
+
+def test_data_frontends():
+    s = SyntheticStream(DataConfig(vocab_size=97, seq_len=9, global_batch=2,
+                                   frontend="audio_frames", d_model=16,
+                                   num_frames=8))
+    assert s.host_batch(0)["frames"].shape == (2, 8, 16)
+
+
+# ----------------------------------------------------------------- optim
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=schedules.constant(0.1), grad_clip=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_scanned_update_matches_unscanned():
+    """The slice-wise (memory-bounded) update path is numerically identical."""
+    key = jax.random.PRNGKey(0)
+    big = jax.random.normal(key, (4, 512, 512 * 17))  # > 2^24 elements
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), big.shape)}
+    params = {"w": big}
+    cfg = AdamWConfig()
+    st = adamw_init(params, cfg)
+    p1, s1, m1 = adamw_update(grads, st, params, cfg)
+    # force the unscanned path by viewing as one slice
+    params2 = {"w": big.reshape(1, *big.shape)}
+    grads2 = {"w": grads["w"].reshape(1, *big.shape)}
+    st2 = adamw_init(params2, cfg)
+    p2, s2, m2 = adamw_update(grads2, st2, params2, cfg)
+    np.testing.assert_allclose(p1["w"], p2["w"][0], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(m1["grad_norm"], m2["grad_norm"], rtol=1e-5)
+
+
+def test_global_norm_matches_naive():
+    tree = {"a": jnp.asarray([[3.0, 4.0]]),
+            "b": jnp.full((4, 300, 17000), 0.01, jnp.bfloat16)}
+    naive = np.sqrt(sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                        for x in jax.tree.leaves(tree)))
+    np.testing.assert_allclose(float(global_norm(tree)), naive, rtol=2e-2)
+
+
+def test_schedules():
+    fn = schedules.warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(fn(0)) == 0.0
+    assert abs(float(fn(10)) - 1.0) < 1e-6
+    assert float(fn(100)) <= 0.11
+    lin = schedules.warmup_linear(2.0, 5, 50)
+    assert abs(float(lin(5)) - 2.0) < 1e-6
+    assert float(lin(50)) < 1e-6
+
+
+# ------------------------------------------------------------ compression
+def test_int8_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                    jnp.float32)
+    q, s = compression.quantize_int8(x)
+    err = jnp.max(jnp.abs(compression.dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-7
+
+
+def test_compressed_psum_shard_map():
+    """int8 wire-format psum over a 2-way axis on host devices."""
+    import subprocess, sys, textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.optim import compression
+        mesh = jax.make_mesh((2,), ("pod",))
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4) / 7.0
+        f = shard_map(lambda s: compression.compressed_psum(s, "pod"),
+                      mesh=mesh, in_specs=P("pod", None),
+                      out_specs=P("pod", None))
+        got = f(x)
+        want = jnp.broadcast_to(x.sum(0, keepdims=True), (2, 4))
+        np.testing.assert_allclose(got, want, atol=2 * float(x.max()) / 127)
+        # error-feedback tree reduce
+        g = {"w": x}
+        f2 = shard_map(lambda s: compression.compressed_pmean_tree(s, "pod"),
+                       mesh=mesh, in_specs=(P("pod", None),),
+                       out_specs=(P("pod", None), P("pod", None)))
+        mean, res = f2(g)
+        np.testing.assert_allclose(mean["w"],
+                                   jnp.broadcast_to(x.mean(0, keepdims=True),
+                                                    (2, 4)),
+                                   atol=2 * float(x.max()) / 127)
+        print("COMPRESSION_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       env={**os.environ,
+                            "PYTHONPATH": os.path.join(
+                                os.path.dirname(__file__), "..", "src")})
+    assert "COMPRESSION_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        for step in (1, 2, 3):
+            mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+        assert mgr.all_steps() == [2, 3]  # keep=2 GC'd step 1
+        restored = mgr.restore(3, tree)
+        np.testing.assert_array_equal(restored["a"], tree["a"] + 3)
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_partial_reads():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        # a stale tmp dir from a crashed save must be invisible
+        os.makedirs(os.path.join(d, "step_000000007.tmp"))
+        assert mgr.latest_step() is None
+        mgr.save(8, {"x": jnp.zeros(3)})
+        assert mgr.latest_step() == 8
+
+
+def test_checkpoint_structure_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"x": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"x": jnp.zeros(3), "y": jnp.zeros(2)})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"x": jnp.zeros(4)})
+
+
+def test_checkpoint_async_save():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=True)
+        mgr.save(5, {"x": jnp.arange(10)})
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+
+# ------------------------------------------------------------- watchdog
+def test_watchdog_flags_straggler():
+    import time
+
+    wd = Watchdog(window=20, z_threshold=3.0, min_steps=3)
+    flagged = []
+    wd.on_straggler = lambda dt, m, s: flagged.append(dt)
+    for i in range(10):
+        wd.step_started()
+        time.sleep(0.002)
+        wd.step_finished()
+    wd.step_started()
+    time.sleep(0.2)  # straggler
+    info = wd.step_finished()
+    assert info["straggler"] and flagged
+
+
+def test_watchdog_hang_timer():
+    import time
+
+    wd = Watchdog(min_steps=2, hang_factor=1.5)
+    hangs = []
+    wd.on_hang = lambda: hangs.append(1)
+    for _ in range(4):
+        wd.step_started()
+        time.sleep(0.05)
+        wd.step_finished()
+    wd.step_started()
+    time.sleep(1.1)  # exceeds the 1s timer floor -> hang fires
+    wd.step_finished()
+    assert wd.hang_count >= 1 and hangs
+
+
+# ----------------------------------------------------- driver fault-tolerance
+def _mk_driver_bits(tmp):
+    tcfg = RT.TrainConfig(optimizer=AdamWConfig(lr=schedules.constant(1e-3)))
+    data = SyntheticStream(DataConfig(vocab_size=TINY.vocab_size, seq_len=17,
+                                      global_batch=4))
+    state = RT.init_state(jax.random.PRNGKey(0), TINY, tcfg)
+    step_fn = jax.jit(functools.partial(RT.train_step, cfg=TINY, tcfg=tcfg))
+    dcfg = DriverConfig(total_steps=12, checkpoint_every=5,
+                        checkpoint_dir=tmp, log_every=100)
+    return state, step_fn, data, dcfg
+
+
+def test_driver_crash_restart_resumes_exactly():
+    with tempfile.TemporaryDirectory() as tmp:
+        state, step_fn, data, dcfg = _mk_driver_bits(tmp)
+        # run to completion once for the reference trajectory
+        ref = run(state, step_fn, data, dcfg, log=lambda *a: None)
+        ref_losses = {m["step"]: m["loss"] for m in ref["metrics"]}
+    with tempfile.TemporaryDirectory() as tmp:
+        state, step_fn, data, dcfg = _mk_driver_bits(tmp)
+        crash = CrashInjector(at_step=7)
+        with pytest.raises(RuntimeError):
+            run(state, step_fn, data, dcfg, crash=crash, log=lambda *a: None)
+        # restart: resumes from the step-5 checkpoint, replays 6/7 exactly
+        res = run(state, step_fn, data, dcfg, crash=crash,
+                  log=lambda *a: None)
+        assert res["resumed_at"] == 5
+        got = {m["step"]: m["loss"] for m in res["metrics"]}
+        for step in (6, 8, 12):
+            np.testing.assert_allclose(got[step], ref_losses[step],
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_driver_preemption_saves_and_stops():
+    with tempfile.TemporaryDirectory() as tmp:
+        state, step_fn, data, dcfg = _mk_driver_bits(tmp)
+        stop = [False]
+
+        calls = []
+
+        def log(msg):
+            calls.append(msg)
+            if len([c for c in calls if "step" in c]) >= 1:
+                stop[0] = True  # request preemption after first log
+
+        res = run(state, step_fn, data, dcfg, stop_flag=stop, log=log)
+        assert res["preempted"]
+        mgr = CheckpointManager(tmp)
+        assert mgr.latest_step() is not None
