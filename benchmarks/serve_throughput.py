@@ -1,13 +1,21 @@
 """Measured end-to-end serving throughput (CPU, small model): batched
-prefill+decode generation under the three quantized-linear modes, and the
-weight-bytes each mode ships.  CPU has no MXU/VPU asymmetry, so this
-validates the *plumbing* (identical tokens from the two int4 paths) and
-quantifies weight compression; the TPU-rate projections live in
-phase_rates/roofline."""
+prefill+decode generation under the three quantized-linear modes, the
+weight-bytes each mode ships, and the continuous-batching engine driven
+at several simulated arrival rates.  CPU has no MXU/VPU asymmetry, so
+this validates the *plumbing* (identical tokens from the two int4 paths)
+and quantifies weight compression; the TPU-rate projections live in
+phase_rates/roofline.
+
+The continuous-engine rows are also written machine-readable to
+``benchmarks/results/BENCH_serve.json`` (tok/s, p50/p95 latency and TTFT
+per arrival rate) so the serving perf trajectory is tracked across PRs.
+"""
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 
@@ -17,6 +25,8 @@ from repro.models.config import ModelConfig
 from repro.quant import quantize_model
 from repro.quant.quantize import quantized_size_bytes
 from repro.runtime import serve as SV
+
+RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_serve.json"
 
 CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
                   d_ff=1024, vocab_size=8192, max_seq_len=512)
@@ -60,4 +70,52 @@ def run() -> list[str]:
                 f"weight_mib={quantized_size_bytes(p) / 2**20:.2f}")
     same = bool((outs["int4_dequant"][8] == outs["msgemm"][8]).mean() > 0.9)
     lines.append(f"serve_throughput/int4_vs_msgemm_tokens_match,0.0,{same}")
+    lines += _continuous(params)
+    return lines
+
+
+def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
+                ) -> list[str]:
+    """Continuous-batching engine at several simulated arrival rates
+    (rate 0 = closed batch: everything queued at t=0).  A warmup stream
+    triggers both jit compiles (prefill + decode shapes) per engine
+    before the measured run, so the JSON tracks serving throughput, not
+    XLA compile time."""
+    from repro.serving import Engine, poisson_stream
+
+    runs = []
+    lines = []
+    for mode in ("bf16", "msgemm"):
+        if mode == "bf16":
+            p, c = params, CFG
+        else:
+            qc = QuantConfig(mode=mode, d=3)
+            p, c = quantize_model(params, CFG, qc), CFG.replace(quant=qc)
+        for rate in rates if mode == "bf16" else rates[:1]:
+            eng = Engine(p, c, max_slots=4, block_size=8, prefill_chunk=16,
+                         max_model_len=48)
+            eng.run(poisson_stream(2, c.vocab_size, max_new_tokens=2,
+                                   seed=1))  # warmup: compile both shapes
+            eng.reset_metrics()
+            eng.run(poisson_stream(n, c.vocab_size,
+                                   max_new_tokens=new_tokens, rate=rate))
+            s = eng.summary()
+            run = {"mode": mode, "arrival_rate": rate, "requests": n,
+                   "new_tokens": new_tokens, **s}
+            runs.append(run)
+            tag = f"continuous/{mode}/rate{rate:g}"
+            lines.append(
+                f"serve_throughput/{tag},{1e6 / s['tok_per_s']:.1f},"
+                f"tok_per_s={s['tok_per_s']:.1f} "
+                f"p50_ms={s['latency_p50_s'] * 1e3:.1f} "
+                f"p95_ms={s['latency_p95_s'] * 1e3:.1f} "
+                f"ttft_p50_ms={s['ttft_p50_s'] * 1e3:.1f} "
+                f"preemptions={s['preemptions']}")
+    RESULTS_JSON.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS_JSON.write_text(json.dumps(
+        {"bench": "serve_continuous",
+         "engine": {"max_slots": 4, "block_size": 8, "prefill_chunk": 16},
+         "model": {"layers": CFG.num_layers, "d_model": CFG.d_model},
+         "runs": runs}, indent=2))
+    lines.append(f"serve_throughput/continuous/json,0.0,{RESULTS_JSON}")
     return lines

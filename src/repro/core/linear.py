@@ -51,6 +51,10 @@ class QuantConfig:
     storage: str = "packed_idx"  # packed_idx | packed_u8
     impl: str = "jnp"  # jnp | pallas
     consume_chunk: int = 1  # j-chunks per consume scan step
+    # Pallas execution mode for impl='pallas': None auto-detects the
+    # backend (compiled on TPU, interpreter elsewhere); set explicitly to
+    # force either mode (e.g. interpret=True to debug on TPU).
+    interpret: bool | None = None
 
     def __post_init__(self):
         if self.mode not in ("bf16", "int4_dequant", "msgemm"):
@@ -133,7 +137,8 @@ def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
         batch = x.shape[:-1]
         y = kops.msgemm(
             codes, x.reshape(-1, k).T, d,
-            scales=params["scales"], scale_block=cfg.scale_block)
+            scales=params["scales"], scale_block=cfg.scale_block,
+            interpret=cfg.interpret)
         return y.T.reshape(*batch, -1).astype(x.dtype)
 
     batch = x.shape[:-1]

@@ -73,10 +73,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
                               "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            softcap: float = 0.0, tq: int = 128,
-                           tk: int = 128, interpret: bool = True):
+                           tk: int = 128, interpret: bool | None = None):
     """q (BH, Sq, dh), k/v (BH, Skv, dh) -> (BH, Sq, dh).
 
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter off-TPU).
     Caller pads Sq % tq == 0 and Skv % tk == 0 (ops.py wrapper)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     BH, Sq, dh = q.shape
     Skv = k.shape[1]
     assert Sq % tq == 0 and Skv % tk == 0, (Sq, Skv, tq, tk)

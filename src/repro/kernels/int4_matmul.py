@@ -56,9 +56,11 @@ def int4_matmul_pallas(
     tm: int = 256,
     tk: int | None = None,
     tb: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     acc_dtype=jnp.float32,
 ) -> jnp.ndarray:
+    if interpret is None:  # auto-detect: compiled on TPU, interpreter off-TPU
+        interpret = jax.default_backend() != "tpu"
     m, k2 = u8.shape
     k, b = x.shape
     assert k == k2 * 2

@@ -84,14 +84,19 @@ def msgemm_pallas(
     tm: int = 256,
     tj: int | None = None,
     tb: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     acc_dtype=jnp.float32,
 ) -> jnp.ndarray:
     """y (m, b) = dequant(codes) @ x via the fused produce+consume kernel.
 
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    elsewhere (CPU/GPU have no Mosaic lowering for this kernel).
+
     Caller (ops.py) guarantees: m % tm == 0, kc % tj == 0, b % tb == 0,
     tj*d % scale_block == 0.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, kc = idx.shape
     k, b = x.shape
     assert k == kc * d, (k, kc, d)

@@ -1,8 +1,16 @@
-"""Serving entry point: quantize a model and serve batched generation
-with msGeMM (or int4-dequant / bf16 baseline) weights.
+"""Serving entry point: quantize a model and serve generation with msGeMM
+(or int4-dequant / bf16 baseline) weights.
+
+Two engines:
+
+* ``--engine static``      fixed-shape batched prefill+decode
+  (runtime.serve.generate) — the original path;
+* ``--engine continuous``  the continuous-batching engine with a paged KV
+  cache (repro.serving) driven by a simulated Poisson arrival stream of
+  mixed-length requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --smoke \
-        --quant msgemm --batch 4 --prompt-len 16 --new-tokens 16
+        --quant msgemm --engine continuous --num-requests 6
 """
 
 from __future__ import annotations
@@ -11,7 +19,7 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core.linear import QuantConfig
@@ -20,19 +28,7 @@ from repro.quant import quantize_model
 from repro.runtime import serve as SV
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--quant", default="msgemm",
-                    choices=["bf16", "int4_dequant", "msgemm"])
-    ap.add_argument("--d", type=int, default=3, help="LUT depth (paper d)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
+def build_model(args):
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
@@ -42,7 +38,10 @@ def main(argv=None):
         params = quantize_model(params, cfg, qc)
         cfg = cfg.replace(quant=qc)
         print(f"[serve] quantized weights to {args.quant} (d={args.d})")
+    return params, cfg, key
 
+
+def run_static(args, params, cfg, key):
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
     if cfg.is_encdec:
@@ -61,6 +60,96 @@ def main(argv=None):
           f"({tput:.1f} tok/s incl. compile)")
     print(out[:, :12])
     return out
+
+
+def make_request_stream(args, cfg):
+    """Mixed-length prompts with Poisson (exponential inter-arrival)
+    timing — deterministic in --seed."""
+    from repro.serving import poisson_stream
+
+    return poisson_stream(args.num_requests, cfg.vocab_size,
+                          max_new_tokens=args.new_tokens,
+                          rate=args.arrival_rate,
+                          min_prompt=max(1, args.prompt_len // 4),
+                          max_prompt=args.prompt_len, seed=args.seed)
+
+
+def run_continuous(args, params, cfg):
+    from repro.serving import Engine
+
+    max_len = args.prompt_len + args.new_tokens
+    engine = Engine(params, cfg,
+                    max_slots=args.max_slots,
+                    block_size=args.block_size,
+                    num_blocks=args.num_blocks or None,
+                    max_model_len=max_len,
+                    prefill_chunk=args.prefill_chunk)
+    reqs = make_request_stream(args, cfg)
+    print(f"[serve] continuous engine: {len(reqs)} requests, prompt lens "
+          f"{sorted(len(r.prompt) for r in reqs)}, rate="
+          f"{args.arrival_rate or 'inf'} req/s, block_size="
+          f"{args.block_size}, slots={args.max_slots}")
+    t0 = time.time()
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    for rid in sorted(results):
+        seq = results[rid]
+        m = seq.metrics()
+        print(f"  req {rid}: prompt={m['prompt_tokens']:3d} "
+              f"new={m['new_tokens']:3d} ttft={m['ttft_s'] * 1e3:7.1f}ms "
+              f"lat={m['latency_s'] * 1e3:7.1f}ms "
+              f"preempt={m['preemptions']} tok={seq.generated[:8]}")
+    s = engine.summary()
+    print(f"[serve] {s['generated_tokens']} tokens in {dt:.2f}s "
+          f"({s['tok_per_s']:.1f} tok/s) p50={s['latency_p50_s'] * 1e3:.1f}ms "
+          f"p95={s['latency_p95_s'] * 1e3:.1f}ms "
+          f"preemptions={s['preemptions']}")
+
+    if args.check:
+        bad = 0
+        for rid, seq in results.items():
+            toks = np.array([list(seq.req.prompt)], np.int32)
+            ref = SV.generate(params, cfg, {"tokens": toks},
+                              max_new_tokens=seq.req.max_new_tokens)
+            if [int(t) for t in np.asarray(ref)[0]] != seq.generated:
+                bad += 1
+        print(f"[serve] static-path parity check: "
+              f"{len(results) - bad}/{len(results)} identical")
+        if bad:
+            raise SystemExit("continuous engine diverged from static path")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="msgemm",
+                    choices=["bf16", "int4_dequant", "msgemm"])
+    ap.add_argument("--d", type=int, default=3, help="LUT depth (paper d)")
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    # continuous-engine knobs
+    ap.add_argument("--num-requests", type=int, default=6)
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="mean req/s of the Poisson stream (<=0: all at t=0)")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool blocks (0: sized to never preempt)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="assert token parity vs the static generate path")
+    args = ap.parse_args(argv)
+
+    params, cfg, key = build_model(args)
+    if args.engine == "continuous":
+        return run_continuous(args, params, cfg)
+    return run_static(args, params, cfg, key)
 
 
 if __name__ == "__main__":

@@ -141,6 +141,22 @@ def _chunk_mask(C: int, Skv: int, window: int, offset) -> jnp.ndarray:
     return m[None, None]
 
 
+def view_mask(Skv: int, positions, *, window: int = 0) -> jnp.ndarray:
+    """Causal (+sliding-window) mask over a logically-ordered KV view.
+
+    positions (B, C) are the query tokens' logical positions; view index w
+    holds the KV of logical position w (true for both the dense cache and
+    a block-table-expanded paged view).  Returns (B, C, Skv) bool — shared
+    by the static decode and paged serving paths.
+    """
+    kpos = jnp.arange(Skv)[None, None, :]
+    qpos = positions[:, :, None]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
 def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
     """Single-token decode. x (B, 1, d); cache (B, Skv, Hk, Dh); pos (B,).
 
@@ -157,14 +173,45 @@ def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
     new_v = jnp.where(mask, v.astype(cache_v.dtype), cache_v)
     new_k = constrain(new_k, "batch", "kv_seq", "kvheads", "head_dim")
     new_v = constrain(new_v, "batch", "kv_seq", "kvheads", "head_dim")
-    kpos = jnp.arange(Skv)[None, :]
-    m = kpos <= pos[:, None]
-    if window:
-        m &= kpos > (pos[:, None] - window)
+    m = view_mask(Skv, pos[:, None], window=window)[:, 0]
     out = _sdpa(cfg, q, new_k, new_v, m[:, None, None, :])
     out = common.linear_apply(p["wo"], out, cfg.quant,
                               in_dim=cfg.num_heads * cfg.head_dim)
     return out, new_k, new_v
+
+
+def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
+               *, window: int = 0):
+    """Self-attention over a paged (block-pooled) KV cache — one step of
+    chunked prefill (C > 1) or batched decode (C == 1); the two share this
+    code and its compiled form.
+
+    x (B, C, d) normed hidden; k_pool/v_pool (num_blocks, bs, Hk, Dh) the
+    layer's shared block pool; positions (B, C) logical token positions;
+    write_slots (B, C) flat pool slots (block*bs + offset) where this
+    step's K/V are scattered — padding rows point into the reserved
+    scratch block; view_slots (B, W) flat pool slots such that view index
+    w holds sequence b's logical position w (block tables expanded by the
+    host scheduler, padded with scratch).  Masked (future / scratch) view
+    entries get probability exactly 0, so outputs match the dense-cache
+    path bit-for-bit.
+
+    Returns (out, new_k_pool, new_v_pool).
+    """
+    q, k, v = _qkv(p, cfg, x, x, positions, positions)
+    nb, bs, hk, dh = k_pool.shape
+    kp = k_pool.reshape(nb * bs, hk, dh)
+    vp = v_pool.reshape(nb * bs, hk, dh)
+    ws = write_slots.reshape(-1)
+    kp = kp.at[ws].set(k.reshape(-1, hk, dh).astype(kp.dtype))
+    vp = vp.at[ws].set(v.reshape(-1, hk, dh).astype(vp.dtype))
+    k_view = jnp.take(kp, view_slots, axis=0)  # (B, W, Hk, Dh)
+    v_view = jnp.take(vp, view_slots, axis=0)
+    m = view_mask(view_slots.shape[1], positions, window=window)
+    out = _sdpa(cfg, q, k_view, v_view, m[:, None])
+    out = common.linear_apply(p["wo"], out, cfg.quant,
+                              in_dim=cfg.num_heads * cfg.head_dim)
+    return out, kp.reshape(nb, bs, hk, dh), vp.reshape(nb, bs, hk, dh)
 
 
 def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions):

@@ -92,14 +92,28 @@ def _ffn(p, cfg, x, aux):
 
 def block_apply(p, cfg: ModelConfig, kind: str, x, positions, *,
                 mode: str = "train", cache: dict | None = None,
-                pos=None, enc_out=None):
-    """Dispatch one block.  Returns (x, new_cache, aux)."""
+                pos=None, enc_out=None, paged=None):
+    """Dispatch one block.  Returns (x, new_cache, aux).
+
+    mode 'paged' runs the serving path over a block-pooled KV cache:
+    ``paged`` carries (write_slots (B, C), view_slots (B, W)) and ``cache``
+    holds this group's pool tensors (num_blocks, bs, Hk, Dh).
+    """
     aux: dict = {}
     window = cfg.sliding_window if kind == "local" else 0
+    if mode == "paged" and kind not in ("attn", "local", "moe"):
+        raise NotImplementedError(
+            f"paged serving supports attention block kinds only, got {kind!r}")
     if kind in ("attn", "local", "moe"):
         h = common.norm_apply(p["ln1"], x, cfg.norm, rms_offset=cfg.rms_offset)
         new_cache = dict(cache) if cache is not None else None
-        if mode == "decode":
+        if mode == "paged":
+            write_slots, view_slots = paged
+            y, nk, nv = layers.attn_paged(
+                p["attn"], cfg, h, cache["k"], cache["v"], positions,
+                write_slots, view_slots, window=window)
+            new_cache["k"], new_cache["v"] = nk, nv
+        elif mode == "decode":
             y, nk, nv = layers.attn_decode(
                 p["attn"], cfg, h, cache["k"], cache["v"], pos, window=window)
             new_cache["k"], new_cache["v"] = nk, nv
@@ -159,7 +173,8 @@ def _stack_init(key, cfg: ModelConfig, pattern, groups: int, *,
 
 
 def _stack_apply(blocks: dict, cfg: ModelConfig, pattern, x, positions, *,
-                 mode="train", cache=None, pos=None, enc_out=None):
+                 mode="train", cache=None, pos=None, enc_out=None,
+                 paged=None):
     """Scan the block-pattern groups.  cache leaves are stacked (G, ...)."""
     has_cache = cache is not None
 
@@ -180,7 +195,7 @@ def _stack_apply(blocks: dict, cfg: ModelConfig, pattern, x, positions, *,
             c = cache_g.get(key) if has_cache else None
             x, nc, aux = block_apply(
                 params_g[key], cfg, kind, x, positions,
-                mode=mode, cache=c, pos=pos, enc_out=enc_out)
+                mode=mode, cache=c, pos=pos, enc_out=enc_out, paged=paged)
             if has_cache:
                 new_cache_g[key] = nc
             for k, v in aux.items():
@@ -334,6 +349,51 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict):
                                enc_out=enc_out)
     logits = logits_from_hidden(params, cfg, x[:, -1:, :])
     return logits[:, 0], cache
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32) -> dict:
+    """Stacked (G, num_blocks, bs, Hk, Dh) KV block pool for paged serving.
+
+    One shared pool per layer group: sequences own disjoint block subsets
+    via host-side block tables (serving/kv_blocks.py), so the (batch,
+    max_len) dense cache footprint becomes (blocks actually in use).
+    Attention-free (recurrent) block kinds, enc-dec, and modality
+    frontends are not paged — the continuous engine rejects them.
+    """
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError(
+            "paged serving supports plain decoder-only models")
+    hk, dh = cfg.num_kv_heads, cfg.head_dim
+    out = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind not in ("attn", "local", "moe"):
+            raise NotImplementedError(
+                f"paged KV cache for block kind {kind!r}")
+        one = {"k": jnp.zeros((num_blocks, block_size, hk, dh), dtype),
+               "v": jnp.zeros((num_blocks, block_size, hk, dh), dtype)}
+        out[f"{i}:{kind}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_groups, *a.shape)).copy(),
+            one)
+    return out
+
+
+def forward_paged(params, cfg: ModelConfig, tokens, pool: dict, positions,
+                  write_slots, view_slots):
+    """One paged serving step — chunked prefill (C > 1) and batched decode
+    (C == 1) both lower through this single function, so the two phases
+    share all model code with each other and with the dense-cache path.
+
+    tokens/positions/write_slots (B, C); view_slots (B, W) flat pool slots
+    covering each row's logical positions 0..W-1 (see layers.attn_paged).
+
+    Returns (logits (B, C, V), new_pool).
+    """
+    x = embed_inputs(params, cfg, tokens)
+    x, pool, _ = _stack_apply(params["blocks"], cfg, cfg.block_pattern, x,
+                              positions, mode="paged", cache=pool,
+                              paged=(write_slots, view_slots))
+    return logits_from_hidden(params, cfg, x), pool
 
 
 def decode_step(params, cfg: ModelConfig, token, cache: dict, pos):

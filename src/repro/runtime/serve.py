@@ -5,6 +5,18 @@
 scale; ``generate`` drives them for the runnable examples.  Quantized
 serving params come from quant.quantize_model (train in bf16, serve in
 int4/msgemm).
+
+Two cache layouts share the same model code:
+
+* static   — dense (batch, max_len, ...) tensors, fixed-shape batch
+             (``init_cache`` / ``prefill_step`` / ``decode_step``);
+* paged    — a shared block pool + per-sequence cache-view indices
+             (``init_paged_cache`` / ``paged_step``), driven by the
+             continuous-batching engine in ``repro.serving``.
+
+``paged_step`` is deliberately phase-agnostic: a prefill chunk is a
+(1, C) call and a decode batch a (B, 1) call of the *same* function, so
+the engine interleaves both over one shared jitted step.
 """
 
 from __future__ import annotations
@@ -29,6 +41,28 @@ def prefill_step(params, cfg: ModelConfig, batch: dict, cache):
 def decode_step(params, cfg: ModelConfig, token, cache, pos):
     """One token for every sequence in the batch."""
     return transformer.decode_step(params, cfg, token, cache, pos)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    return transformer.init_paged_cache(cfg, num_blocks, block_size, dtype)
+
+
+def paged_step(params, cfg: ModelConfig, tokens, pool, positions,
+               write_slots, view_slots, last_idx):
+    """One serving step over the paged KV cache (prefill chunk or decode
+    batch — same code, two shapes).
+
+    tokens/positions/write_slots (B, C); view_slots (B, W); last_idx (B,)
+    selects the chunk position whose next-token logits each row returns
+    (C-1 for decode, the last real prompt token for a prefill chunk).
+
+    Returns (logits (B, V), new_pool).
+    """
+    logits, pool = transformer.forward_paged(
+        params, cfg, tokens, pool, positions, write_slots, view_slots)
+    sel = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)[:, 0]
+    return sel, pool
 
 
 def greedy(logits):

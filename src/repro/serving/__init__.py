@@ -1,0 +1,17 @@
+"""Continuous-batching serving: paged KV cache (kv_blocks), FCFS
+scheduler with chunked prefill + preemption (scheduler), and the engine
+driving one shared jitted step over both phases (engine).
+
+    from repro.serving import Engine, Request
+    eng = Engine(params, cfg, max_slots=8, block_size=16)
+    results = eng.run([Request(rid=0, prompt=(1, 2, 3), max_new_tokens=16)])
+"""
+
+from repro.serving.engine import Engine
+from repro.serving.kv_blocks import SCRATCH, BlockPool
+from repro.serving.request import (Phase, Request, Sequence, detokenize,
+                                   poisson_stream)
+from repro.serving.scheduler import Scheduler
+
+__all__ = ["Engine", "Request", "Sequence", "Phase", "BlockPool",
+           "Scheduler", "SCRATCH", "detokenize", "poisson_stream"]

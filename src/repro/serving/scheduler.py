@@ -1,0 +1,126 @@
+"""Continuous-batching scheduler: FCFS admission into a fixed set of
+decode slots, token-budgeted prefill chunking, and preemption/eviction
+when the KV block pool is exhausted.
+
+Policy (vLLM-style, simplified):
+
+* **Admission** — strict FCFS: the head of the waiting queue is admitted
+  when a decode slot is free AND the pool can supply all blocks its
+  prefill needs; the queue never reorders (no head-of-line skipping).
+* **Prefill** — the earliest-admitted sequence still in PREFILL gets one
+  chunk of at most ``prefill_chunk`` tokens per engine iteration (the
+  iteration token budget), so a long prompt cannot monopolise the step
+  loop: decode iterations interleave between its chunks.
+* **Preemption** — when a decoding sequence needs a block and the pool is
+  dry, the *latest-admitted* running sequence is evicted: blocks freed,
+  re-queued at the front of the waiting queue, later re-prefilled from
+  prompt ⊕ generated (token-exact, see request.Sequence).  Evicting the
+  newest work first keeps FCFS latency ordering.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+
+from repro.serving.kv_blocks import BlockPool
+from repro.serving.request import Phase, Sequence
+
+
+class Scheduler:
+    def __init__(self, pool: BlockPool, *, max_slots: int,
+                 prefill_chunk: int):
+        if max_slots < 1 or prefill_chunk < 1:
+            raise ValueError("max_slots and prefill_chunk must be positive")
+        self.pool = pool
+        self.max_slots = max_slots
+        self.prefill_chunk = prefill_chunk
+        self.waiting: deque[Sequence] = deque()
+        self.running: list[Sequence] = []
+        self._free_slots = list(range(max_slots))
+        heapq.heapify(self._free_slots)
+        self._seqno = 0
+        self.num_admitted = 0
+        self.num_preemptions = 0
+
+    # ------------------------------------------------------------- state
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # --------------------------------------------------------- admission
+    def add(self, seq: Sequence) -> None:
+        seq.phase = Phase.WAITING
+        self.waiting.append(seq)
+
+    def _admit(self) -> None:
+        while self.waiting and self._free_slots:
+            seq = self.waiting[0]
+            got = self.pool.alloc(self.pool.blocks_for(len(seq.prefill_tokens)))
+            if got is None:
+                return  # FCFS: the head waits for blocks, nobody skips it
+            self.waiting.popleft()
+            seq.blocks = got
+            seq.slot = heapq.heappop(self._free_slots)
+            seq.phase = Phase.PREFILL
+            seq.prefill_pos = 0
+            seq.admit_seqno = self._seqno
+            self._seqno += 1
+            self.num_admitted += 1
+            self.running.append(seq)
+
+    # -------------------------------------------------------- scheduling
+    def schedule(self):
+        """Pick this iteration's work: ('prefill', seq, start, end) for one
+        chunk, ('decode', seqs) for a batch iteration, or None when idle."""
+        self._admit()
+        pre = [s for s in self.running if s.phase is Phase.PREFILL]
+        if pre:
+            seq = min(pre, key=lambda s: s.admit_seqno)
+            start = seq.prefill_pos
+            end = min(start + self.prefill_chunk, len(seq.prefill_tokens))
+            return ("prefill", seq, start, end)
+        dec = sorted((s for s in self.running if s.phase is Phase.DECODE),
+                     key=lambda s: s.admit_seqno)
+        if dec:
+            return ("decode", dec)
+        return None
+
+    # -------------------------------------------- block growth / eviction
+    def grow_for_decode(self, seq: Sequence) -> bool:
+        """Ensure ``seq`` owns blocks for all ``num_tokens`` positions,
+        evicting latest-admitted sequences on pool exhaustion.  Returns
+        False iff ``seq`` itself was the victim (skip its decode)."""
+        need = self.pool.blocks_for(seq.num_tokens)
+        while len(seq.blocks) < need:
+            got = self.pool.alloc(need - len(seq.blocks))
+            if got is not None:
+                seq.blocks.extend(got)
+                return True
+            victim = max(self.running, key=lambda s: s.admit_seqno)
+            self.preempt(victim)
+            if victim is seq:
+                return False
+        return True
+
+    def preempt(self, victim: Sequence) -> None:
+        self.num_preemptions += 1
+        victim.preemptions += 1
+        self.pool.free(victim.blocks)
+        victim.blocks = []
+        heapq.heappush(self._free_slots, victim.slot)
+        victim.slot = -1
+        victim.phase = Phase.WAITING
+        victim.prefill_pos = 0
+        self.running.remove(victim)
+        # victims are picked newest-first, so appendleft keeps the waiting
+        # queue sorted by original admission order
+        self.waiting.appendleft(victim)
+
+    # --------------------------------------------------------- completion
+    def finish(self, seq: Sequence) -> None:
+        self.pool.free(seq.blocks)
+        seq.blocks = []
+        heapq.heappush(self._free_slots, seq.slot)
+        seq.slot = -1
+        seq.phase = Phase.FINISHED
+        self.running.remove(seq)
