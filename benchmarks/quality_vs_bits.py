@@ -1,0 +1,109 @@
+"""Quality-vs-bits sweep: {uniform int4, learned codebook, bf16} x
+{LUT depth d, scale block} on a small trained LM.
+
+For every (d, scale_block) cell both 4-bit variants ship identical bit
+widths and identical kernels — the learned codebook only changes the
+16-entry value table — so any quality gap is pure calibration win.
+Records weighted quantization error (the calib fitting objective),
+perplexity, logit MSE and top-1 agreement vs the bf16 reference to
+``benchmarks/results/BENCH_quality.json``.
+
+    PYTHONPATH=src python benchmarks/quality_vs_bits.py [--steps 60]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from pathlib import Path
+
+import jax
+
+from repro import calib
+from repro.core.linear import QuantConfig
+from repro.data import DataConfig, SyntheticStream
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, schedules
+from repro.quant import quantize_model
+from repro.runtime import train as RT
+
+RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_quality.json"
+
+CFG = ModelConfig(name="quality-bench", num_layers=3, d_model=96,
+                  num_heads=6, num_kv_heads=2, d_ff=288, vocab_size=384,
+                  max_seq_len=128, remat=False)
+SWEEP = [  # (d, scale_block) — §3.3 requires d | scale_block
+    (2, 24),
+    (3, 24),
+    (3, 48),
+]
+
+
+def train_reference(steps: int):
+    data = SyntheticStream(DataConfig(vocab_size=CFG.vocab_size, seq_len=49,
+                                      global_batch=16, mode="lcg"))
+    tcfg = RT.TrainConfig(optimizer=AdamWConfig(
+        lr=schedules.warmup_cosine(1e-2, 10, steps)))
+    state = RT.init_state(jax.random.PRNGKey(0), CFG, tcfg)
+    step_fn = jax.jit(functools.partial(RT.train_step, cfg=CFG, tcfg=tcfg),
+                      donate_argnums=(0,))
+    for step in range(steps):
+        state, metrics = step_fn(state, batch=data.device_batch(step))
+    print(f"reference trained {steps} steps, "
+          f"final loss {float(metrics['loss']):.3f}")
+    return state["params"], data
+
+
+def run(steps: int) -> dict:
+    params, data = train_reference(steps)
+    results = {"config": {"model": CFG.name, "train_steps": steps},
+               "sweep": []}
+    for d, scale_block in SWEEP:
+        quant = QuantConfig(mode="msgemm", d=d, scale_block=scale_block)
+        res = calib.calibrate(params, CFG, data,
+                              calib.Recipe(calib_steps=2, kmeans_iters=15),
+                              quant=quant)
+        qcfg = CFG.replace(quant=res.quant)
+        uniform = quantize_model(params, CFG, res.quant)
+        quality = calib.quality.compare(
+            params, CFG,
+            {"uniform_int4": (uniform, qcfg),
+             "learned_codebook": (res.params, qcfg)},
+            data, steps=2)
+        agg = res.report["aggregate"]
+        cell = {
+            "d": d,
+            "scale_block": scale_block,
+            "weighted_quant_err": {
+                "uniform_int4": agg["uniform_weighted_err"],
+                "learned_codebook": agg["learned_weighted_err"],
+            },
+            "quality": quality,
+        }
+        results["sweep"].append(cell)
+        won = (agg["learned_weighted_err"] < agg["uniform_weighted_err"])
+        print(f"d={d} block={scale_block}: weighted err "
+              f"{agg['uniform_weighted_err']:.3e} -> "
+              f"{agg['learned_weighted_err']:.3e} "
+              f"({'learned wins' if won else 'UNIFORM WINS'}); ppl "
+              f"bf16={quality['bf16']['perplexity']:.2f} "
+              f"uniform={quality['uniform_int4']['perplexity']:.2f} "
+              f"learned={quality['learned_codebook']['perplexity']:.2f}")
+    ok = all(c["weighted_quant_err"]["learned_codebook"]
+             < c["weighted_quant_err"]["uniform_int4"]
+             for c in results["sweep"])
+    results["learned_strictly_better_everywhere"] = ok
+    return results
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--steps", type=int, default=60)
+    args = parser.parse_args()
+    results = run(args.steps)
+    RESULTS_JSON.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS_JSON.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"\nwrote {RESULTS_JSON}")
+    assert results["learned_strictly_better_everywhere"], \
+        "learned codebooks must beat uniform int4 in every sweep cell"

@@ -1,0 +1,81 @@
+"""Calibrated non-uniform LUT quantization, end to end: train a tiny LM,
+collect activation statistics, fit per-layer 16-entry codebooks, and serve
+the quantized model — printing quality deltas vs uniform int4 and bf16.
+
+    PYTHONPATH=src python examples/quantize_calibrate.py [--steps 80]
+
+The learned codebooks cost the msGeMM kernels nothing: the produce-phase
+tuple basis is already an operand, it just stops being the uniform grid.
+"""
+
+import argparse
+import functools
+
+import jax
+import numpy as np
+
+from repro import calib
+from repro.core.linear import QuantConfig
+from repro.data import DataConfig, SyntheticStream
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, schedules
+from repro.quant import quantize_model
+from repro.runtime import serve as SV
+from repro.runtime import train as RT
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--steps", type=int, default=80)
+parser.add_argument("--recipe", default="kmeans",
+                    choices=["kmeans", "kmeans+gptq", "model"])
+args = parser.parse_args()
+
+cfg = ModelConfig(name="calib-demo", num_layers=4, d_model=128, num_heads=8,
+                  num_kv_heads=4, d_ff=384, vocab_size=512, max_seq_len=256,
+                  remat=False)
+data = SyntheticStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=65,
+                                  global_batch=16, mode="lcg"))
+
+# ---- 1. train the bf16 reference ------------------------------------------
+tcfg = RT.TrainConfig(optimizer=AdamWConfig(
+    lr=schedules.warmup_cosine(1e-2, 10, args.steps)))
+state = RT.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+step_fn = jax.jit(functools.partial(RT.train_step, cfg=cfg, tcfg=tcfg),
+                  donate_argnums=(0,))
+for step in range(args.steps):
+    state, metrics = step_fn(state, batch=data.device_batch(step))
+    if step % 20 == 0 or step == args.steps - 1:
+        print(f"train step {step:3d}  loss={float(metrics['loss']):.3f}")
+params = state["params"]
+
+# ---- 2 + 3. collect stats and calibrate -----------------------------------
+recipe = {
+    "kmeans": calib.Recipe(),
+    "kmeans+gptq": calib.Recipe(rounding="gptq"),
+    "model": calib.Recipe(scope="model"),
+}[args.recipe]
+quant = QuantConfig(mode="msgemm", d=3, scale_block=36)
+result = calib.calibrate(params, cfg, data, recipe, quant=quant)
+agg = result.report["aggregate"]
+print(f"\ncalibrated {agg['num_linears']} linears with recipe "
+      f"{args.recipe!r}: weighted quantization error "
+      f"{agg['uniform_weighted_err']:.3e} (uniform int4) -> "
+      f"{agg['learned_weighted_err']:.3e} (learned codebooks), "
+      f"{(1 - agg['learned_weighted_err'] / agg['uniform_weighted_err']) * 100:.1f}% lower")
+
+# ---- 4. quality deltas vs uniform int4 and bf16 ---------------------------
+qcfg = cfg.replace(quant=result.quant)
+uniform = quantize_model(params, cfg, result.quant)
+report = calib.quality.compare(
+    params, cfg,
+    {"uniform_int4": (uniform, qcfg), "learned_codebook": (result.params, qcfg)},
+    data, steps=2)
+print(f"\n{'variant':18s} {'perplexity':>10s} {'logit_mse':>10s} {'top1':>6s}")
+for name, m in report.items():
+    print(f"{name:18s} {m['perplexity']:10.3f} {m['logit_mse']:10.5f} "
+          f"{m['top1_agree']:6.3f}")
+
+# ---- 5. serve the calibrated model ----------------------------------------
+prompt = {"tokens": np.asarray(data.host_batch(999)["tokens"][:2, :16])}
+toks = SV.generate(result.params, qcfg, prompt, max_new_tokens=16)
+print(f"\nserved (msgemm + learned codebooks): {list(map(int, toks[0][:12]))}")

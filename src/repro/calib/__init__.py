@@ -1,0 +1,26 @@
+"""repro.calib — activation-aware non-uniform LUT quantization.
+
+msGeMM's LUT machinery supports arbitrary 16-entry value codebooks at
+zero kernel cost (the produce basis is an operand, paper §3.2 / Eq. 5);
+this package learns those codebooks from a trained model plus a small
+calibration stream:
+
+    codebook    the Codebook abstraction (uniform int4 = degenerate case)
+    stats       per-linear input second-moment collection (observer hook)
+    fit         weighted k-means / scale search / GPTQ-lite + calibrate()
+    quality     perplexity & logit-MSE harness vs the bf16 reference
+
+Typical flow (examples/quantize_calibrate.py)::
+
+    result = calib.calibrate(params, cfg, stream, calib.Recipe())
+    qcfg   = cfg.replace(quant=result.quant)
+    # result.params serves through runtime.serve / serving.Engine
+"""
+
+from repro.calib.codebook import Codebook, uniform_values  # noqa: F401
+from repro.calib.fit import (  # noqa: F401
+    CalibResult, Recipe, calibrate, fit_codebook, fit_block_scales,
+    gptq_codes, quantize_slice,
+)
+from repro.calib.stats import StatsCollector, collect, observing  # noqa: F401
+from repro.calib import quality  # noqa: F401

@@ -1,0 +1,100 @@
+"""16-entry codebook abstraction for non-uniform LUT quantization.
+
+msGeMM's consume phase only ever *adds table entries* — Eq. 5 never
+requires the 16 coefficient levels to be the uniform int4 grid, so the
+LUT machinery natively supports arbitrary learned codebooks at zero extra
+kernel cost (the produce basis ``C_d`` is already a kernel operand).
+
+Conventions shared by core.scales / core.lut / kernels:
+
+* a codebook is a (16,) float32 value table indexed by the 4-bit code;
+* ``values[0] == 0.0`` — code 0 is the k-padding code (core.packing pads
+  with it and relies on a zero contribution), and the kernels pad idx
+  tiles with flat index 0 whose basis row is (C[0], ..., C[0]);
+* scales stay bounding-box normalized (``amax / 7``, identical to
+  uniform int4), so codebook entries live in the normalized domain
+  [-7, 7] and uniform/learned variants are comparable on the same scale
+  grid.
+
+``UNIFORM_INT4`` (the two's-complement value order of paper §3.1) is the
+degenerate case: quantizing with it reproduces core.scales.quantize_int4
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import lut as lut_mod
+from repro.core import packing
+
+NLEVELS = packing.NLEVELS
+
+
+def uniform_values() -> np.ndarray:
+    """The uniform int4 grid in code order: b(0)=0 ... b(15)=-1 (§3.1)."""
+    return np.asarray(packing.b_values(jnp.float32))
+
+
+class Codebook(NamedTuple):
+    """A 16-entry value table (per-layer, or one shared per model).
+
+    values: (16,) float32, values[0] == 0.  For scan-stacked / expert
+    weights the stacked form is a plain (G, 16) array of per-slice
+    ``values`` (see quant.quantize_model).
+    """
+
+    values: np.ndarray
+
+    @classmethod
+    def uniform_int4(cls) -> "Codebook":
+        return cls(values=uniform_values())
+
+    @classmethod
+    def from_centroids(cls, centroids) -> "Codebook":
+        """Build a valid codebook from up to 15 learned centroids: value 0
+        is pinned at code 0, the rest fill codes 1..15 in sorted order."""
+        c = np.asarray(centroids, np.float64).reshape(-1)
+        c = c[np.abs(c) > 1e-12]  # 0 is always present via code 0
+        if c.size > NLEVELS - 1:
+            raise ValueError(f"at most {NLEVELS - 1} nonzero centroids, "
+                             f"got {c.size}")
+        vals = np.zeros((NLEVELS,), np.float32)
+        vals[1:1 + c.size] = np.sort(c).astype(np.float32)
+        return cls(values=vals)
+
+    def check(self) -> "Codebook":
+        """Validate the invariants the packed/padded paths rely on."""
+        v = np.asarray(self.values)
+        if v.shape != (NLEVELS,):
+            raise ValueError(f"codebook must be ({NLEVELS},), got {v.shape}")
+        if v[0] != 0.0:
+            raise ValueError(
+                "codebook[0] must be 0 — code 0 is the zero-padding code "
+                "(core.packing.pad_k) and padded LUT rows must contribute 0")
+        if not np.all(np.isfinite(v)):
+            raise ValueError("codebook values must be finite")
+        return self
+
+    def encode(self, z: jnp.ndarray) -> jnp.ndarray:
+        """Nearest-entry codes for normalized values z (...,)."""
+        cb = jnp.asarray(self.values, jnp.float32)
+        return jnp.argmin(
+            jnp.abs(z[..., None].astype(jnp.float32) - cb), axis=-1
+        ).astype(jnp.uint8)
+
+    def decode(self, codes: jnp.ndarray) -> jnp.ndarray:
+        """codes (...,) uint8 -> values (...,) float32."""
+        return jnp.take(jnp.asarray(self.values, jnp.float32),
+                        jnp.asarray(codes, jnp.int32), axis=0)
+
+    def basis(self, d: int, dtype=jnp.float32) -> jnp.ndarray:
+        """The produce-phase tuple basis C_d (16^d, d) over this codebook."""
+        return lut_mod.tuple_basis(d, dtype=dtype, codebook=self.values)
+
+    @property
+    def is_uniform(self) -> bool:
+        return bool(np.array_equal(np.asarray(self.values), uniform_values()))

@@ -1,0 +1,391 @@
+"""Codebook + scale fitting and the ``calibrate`` entry point.
+
+Post-training quantization onto learned 16-entry codebooks (calib/
+codebook.py).  The fitting objective is the activation-aware weighted
+reconstruction error
+
+    E_x || (W - Q) x ||^2  ≈  sum_ij  E[x_j^2] (W_ij - Q_ij)^2
+
+with per-channel input second moments from calib/stats.py.  Pieces:
+
+* :func:`fit_codebook`     weighted Lloyd k-means over scale-normalized
+                           weight values, centroid 0 pinned at 0 (the
+                           padding code), initialized at the uniform int4
+                           grid — so the learned table never does worse
+                           than uniform under the same scales;
+* :func:`fit_block_scales` optional per-block bounding-box shrink search
+                           (round-to-nearest overload clipping trade-off);
+* :func:`gptq_codes`       GPTQ-lite sequential rounding with error
+                           feedback through the input second-moment
+                           matrix (needs stats mode='full');
+* :func:`calibrate`        the one-call workflow: collect stats -> fit
+                           per-layer (or per-model) codebooks -> emit a
+                           servable quantized param tree + error report.
+
+Fitting is host-side numpy — calibration is an offline, once-per-model
+step; only the resulting codebooks/codes ride the hot path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import linear as qlinear
+from repro.core import packing, scales
+from repro.calib import stats as calib_stats
+from repro.calib.codebook import Codebook, uniform_values
+from repro.quant.quantize import QUANTIZABLE
+
+INT4_MAX = packing.INT4_MAX
+NLEVELS = packing.NLEVELS
+
+
+# ---------------------------------------------------------------- recipes
+@dataclass(frozen=True)
+class Recipe:
+    """Knobs for one calibration run (see README §Calibration)."""
+
+    scope: str = "layer"          # layer | model  (one codebook per ...)
+    method: str = "kmeans"        # kmeans | uniform (uniform = int4 grid)
+    rounding: str = "nearest"     # nearest | gptq (gptq needs stats 'full')
+    activation_weighting: bool = True
+    kmeans_iters: int = 25
+    stats_mode: str = ""          # '' -> 'full' when rounding='gptq' else 'diag'
+    calib_steps: int = 4          # calibration batches drawn from the stream
+    scale_search: int = 0         # >0: per-block shrink candidates to search
+    scale_search_lo: float = 0.75
+    sample_limit: int = 1 << 20   # max weight samples per k-means fit
+    gptq_damping: float = 1e-2    # fraction of mean(diag H) added to H
+
+    def __post_init__(self):
+        if self.scope not in ("layer", "model"):
+            raise ValueError(f"scope {self.scope!r}")
+        if self.method not in ("kmeans", "uniform"):
+            raise ValueError(f"method {self.method!r}")
+        if self.rounding not in ("nearest", "gptq"):
+            raise ValueError(f"rounding {self.rounding!r}")
+        if self.stats_mode == "":
+            object.__setattr__(
+                self, "stats_mode",
+                "full" if self.rounding == "gptq" else "diag")
+        if self.stats_mode not in ("diag", "full"):
+            raise ValueError(f"stats_mode {self.stats_mode!r}")
+        if self.rounding == "gptq" and self.stats_mode != "full":
+            raise ValueError("rounding='gptq' needs stats_mode='full'")
+
+
+@dataclass
+class CalibResult:
+    params: dict                  # servable quantized param tree
+    quant: Any                    # the QuantConfig the tree was built for
+    codebooks: dict               # path str -> (..., 16) value table
+    report: dict                  # per-layer + aggregate weighted errors
+    collector: Any                # the StatsCollector (for inspection)
+
+
+# ---------------------------------------------------------------- fitting
+def fit_codebook(z, weights=None, *, iters: int = 25,
+                 init=None, sample_limit: int = 1 << 20,
+                 seed: int = 0) -> np.ndarray:
+    """Weighted Lloyd k-means over normalized weight values z (flat).
+
+    Returns a (16,) value table in code order, entry 0 pinned at 0.
+    Initialized at ``init`` (default: the uniform int4 grid), so with
+    nearest assignment the fitted table's weighted MSE is <= uniform's
+    (Lloyd never increases the objective).
+    """
+    z = np.asarray(z, np.float64).reshape(-1)
+    w = (np.ones_like(z) if weights is None
+         else np.asarray(weights, np.float64).reshape(-1))
+    if z.size > sample_limit:
+        rng = np.random.default_rng(seed)
+        sel = rng.choice(z.size, size=sample_limit, replace=False)
+        z, w = z[sel], w[sel]
+    c = np.array(uniform_values() if init is None else init, np.float64)
+    for _ in range(iters):
+        assign = np.argmin(np.abs(z[:, None] - c[None, :]), axis=1)
+        moved = False
+        for j in range(1, NLEVELS):  # code 0 stays the padding zero
+            m = assign == j
+            wm = w[m]
+            if wm.sum() <= 0:
+                continue  # empty cluster keeps its value (monotone Lloyd)
+            nc = float(np.sum(wm * z[m]) / wm.sum())
+            moved = moved or abs(nc - c[j]) > 1e-12
+            c[j] = nc
+        if not moved:
+            break
+    return c.astype(np.float32)
+
+
+def fit_block_scales(w, values, block: int, col_weights=None, *,
+                     candidates: int = 0, lo: float = 0.75):
+    """Per-row-block scales for quantizing ``w`` onto ``values``.
+
+    Base scale is the bounding box ``amax / 7`` (identical to uniform
+    int4).  With ``candidates > 0``, additionally searches that many
+    shrink factors in [lo, 1] per block and keeps the weighted-error
+    argmin — trading clipping for finer resolution near zero.
+
+    Returns (scales (m, nb), padded w blocks (m, nb, block), col-weight
+    blocks or None).
+    """
+    w = np.asarray(w, np.float64)
+    m, k = w.shape
+    nb = -(-k // block)
+    wp = np.pad(w, ((0, 0), (0, nb * block - k)))
+    wb = wp.reshape(m, nb, block)
+    cw_b = None
+    if col_weights is not None:
+        cw = np.pad(np.asarray(col_weights, np.float64),
+                    (0, nb * block - k))
+        cw_b = cw.reshape(1, nb, block)
+    amax = np.abs(wb).max(axis=-1)
+    base = np.where(amax == 0, 1.0, amax / INT4_MAX)
+    if candidates <= 0:
+        return base, wb, cw_b
+    vals = np.asarray(values, np.float64)
+    best_err = np.full((m, nb), np.inf)
+    best_s = base.copy()
+    for f in np.linspace(lo, 1.0, candidates):
+        s = base * f
+        z = wb / s[..., None]
+        deq = vals[np.argmin(np.abs(z[..., None] - vals), axis=-1)]
+        e2 = (wb - deq * s[..., None]) ** 2
+        err = (e2 * cw_b).sum(-1) if cw_b is not None else e2.sum(-1)
+        better = err < best_err
+        best_err = np.where(better, err, best_err)
+        best_s = np.where(better, s, best_s)
+    return best_s, wb, cw_b
+
+
+def gptq_codes(w, H, values, scale, block: int, *,
+               damping: float = 1e-2) -> np.ndarray:
+    """GPTQ-lite: sequential nearest-codebook rounding with error feedback.
+
+    Columns are quantized in index order; each column's rounding error is
+    compensated in the not-yet-quantized columns through the upper
+    Cholesky factor U of the inverse input second moment (H = E[x x^T],
+    H^-1 = U^T U) — the GPTQ recurrence, without activation reordering or
+    lazy blocking.  Minimizes E||(W - Q) x||^2 given the codebook+scales.
+
+    w (m, k); H (k, k); scale (m, ceil(k/block)).  Returns codes (m, k).
+    """
+    w = np.array(w, np.float64)  # mutated
+    m, k = w.shape
+    H = np.array(H, np.float64)
+    H = H + damping * max(np.mean(np.diag(H)), 1e-12) * np.eye(k)
+    U = np.linalg.cholesky(np.linalg.inv(H)).T  # upper, H^-1 = U^T U
+    vals = np.asarray(values, np.float64)
+    codes = np.zeros((m, k), np.uint8)
+    for j in range(k):
+        s = scale[:, j // block]
+        z = w[:, j] / s
+        cj = np.argmin(np.abs(z[:, None] - vals[None, :]), axis=1)
+        codes[:, j] = cj
+        err = (w[:, j] - vals[cj] * s) / U[j, j]
+        if j + 1 < k:
+            w[:, j + 1:] -= np.outer(err, U[j, j + 1:])
+    return codes
+
+
+def quantize_slice(w, quant, values, *, col_weights=None, H=None,
+                   recipe: Recipe = None) -> scales.QuantizedTensor:
+    """Quantize one dense (out, in) slice onto ``values`` under ``quant``,
+    honoring the recipe's scale search and rounding mode."""
+    recipe = recipe or Recipe()
+    w = np.asarray(w, np.float64)
+    m, k = w.shape
+    block = quant.scale_block
+    s, wb, _ = fit_block_scales(
+        w, values, block, col_weights,
+        candidates=recipe.scale_search, lo=recipe.scale_search_lo)
+    if recipe.rounding == "gptq" and H is not None:
+        codes = gptq_codes(w, H, values, s, block,
+                           damping=recipe.gptq_damping)
+    else:
+        vals = np.asarray(values, np.float64)
+        z = wb / s[..., None]
+        codes = np.argmin(np.abs(z[..., None] - vals), axis=-1)
+        codes = codes.reshape(m, -1)[:, :k].astype(np.uint8)
+    return scales.QuantizedTensor(
+        codes=jnp.asarray(codes, jnp.uint8),
+        scales=jnp.asarray(s, jnp.float32), block=block, shape=(m, k),
+        codebook=jnp.asarray(values, jnp.float32))
+
+
+def _sample_weights(s, wb_shape, cw_b) -> np.ndarray:
+    """Per-sample k-means weights in the *unnormalized* error domain:
+    cw_j * (w - s*c)^2 == (cw_j * s^2) * (z - c)^2, so weighting the
+    normalized samples by cw_j * s_block^2 makes the Lloyd objective equal
+    the reported weighted_quantization_error (and its monotone-improvement
+    guarantee transfer to it)."""
+    wt = np.broadcast_to(np.asarray(s)[..., None] ** 2, wb_shape)
+    if cw_b is not None:
+        wt = wt * np.broadcast_to(cw_b, wb_shape)
+    return wt.reshape(-1)
+
+
+# ---------------------------------------------------------------- walking
+def _quantizable_leaves(params, path=()):
+    """Yield (path, name, leaf_dict) for every QuantizedLinear leaf."""
+    for name, v in params.items():
+        if name in QUANTIZABLE and isinstance(v, dict) and "w" in v:
+            yield path + (name,), name, v
+        elif isinstance(v, dict):
+            yield from _quantizable_leaves(v, path + (name,))
+
+
+def _tag_for(path: tuple, name: str) -> str:
+    return ("moe_" + name) if "experts" in path else name
+
+
+def _stack_leaf(slices: list, stack_shape: tuple) -> dict:
+    """Re-stack per-slice param dicts into leading stack dims."""
+    keys = slices[0].keys()
+    out = {}
+    for kk in keys:
+        arr = jnp.stack([s[kk] for s in slices], axis=0)
+        out[kk] = arr.reshape(*stack_shape, *arr.shape[1:])
+    return out
+
+
+# ---------------------------------------------------------------- calibrate
+def calibrate(params, cfg, data, recipe: Recipe = Recipe(), *,
+              quant=None) -> CalibResult:
+    """Activation-aware post-training quantization, end to end.
+
+    params/cfg: a *dense* (bf16/f32) model; data: a SyntheticStream (or a
+    list of batch dicts) to draw ``recipe.calib_steps`` calibration
+    batches from; quant: the target QuantConfig (defaults to msgemm with
+    learned codebooks; ``codebook='learned'`` is forced so the emitted
+    tree carries its tables).
+
+    Returns a :class:`CalibResult` whose ``params`` serve through every
+    existing path (static generate, paged continuous batching) under
+    ``cfg.replace(quant=result.quant)``.
+    """
+    import dataclasses
+
+    if quant is None:
+        quant = (cfg.quant if cfg.quant.mode != "bf16"
+                 else qlinear.QuantConfig(mode="msgemm"))
+    if quant.codebook != "learned":
+        quant = dataclasses.replace(quant, codebook="learned")
+
+    batches = calib_stats.batches_from(data, recipe.calib_steps)
+    collector = calib_stats.collect(params, cfg, batches,
+                                    mode=recipe.stats_mode)
+
+    leaves = list(_quantizable_leaves(params))
+
+    # scope='model': one codebook fitted over samples pooled from every
+    # linear (normalized domain, activation-weighted), then shared.
+    model_values = None
+    if recipe.scope == "model" and recipe.method == "kmeans":
+        zs, ws = [], []
+        per_leaf = max(recipe.sample_limit // max(len(leaves), 1), 4096)
+        for path, name, v in leaves:
+            w = np.asarray(v["w"], np.float64)
+            w2 = w.reshape(-1, w.shape[-1])
+            s, wb, cw_b = fit_block_scales(
+                w2, uniform_values(), quant.scale_block,
+                collector.second_moment(_tag_for(path, name), w.shape[-1])
+                if recipe.activation_weighting else None)
+            z = (wb / s[..., None]).reshape(-1)
+            wt = _sample_weights(s, wb.shape, cw_b)
+            if z.size > per_leaf:
+                rng = np.random.default_rng(len(zs))
+                sel = rng.choice(z.size, size=per_leaf, replace=False)
+                z, wt = z[sel], wt[sel]
+            zs.append(z)
+            ws.append(wt)
+        model_values = fit_codebook(
+            np.concatenate(zs), np.concatenate(ws),
+            iters=recipe.kmeans_iters, sample_limit=recipe.sample_limit)
+        Codebook(values=model_values).check()
+
+    codebooks: dict[str, np.ndarray] = {}
+    report: dict[str, dict] = {}
+    sum_uni, sum_learned, n_leaves = 0.0, 0.0, 0
+
+    def convert_leaf(path, name, v):
+        nonlocal sum_uni, sum_learned, n_leaves
+        w = np.asarray(v["w"], np.float64)
+        k = w.shape[-1]
+        tag = _tag_for(path, name)
+        colw = (collector.second_moment(tag, k)
+                if recipe.activation_weighting else None)
+        H = (collector.get(tag, k).hessian
+             if recipe.rounding == "gptq" else None)
+        stack_shape = w.shape[:-2]
+        slices, values_out = [], []
+        leaf_uni, leaf_new = 0.0, 0.0
+        for ix in (np.ndindex(*stack_shape) if stack_shape else [()]):
+            w2 = w[ix]
+            if recipe.method == "uniform" or (
+                    recipe.scope == "model" and model_values is None):
+                values = uniform_values()
+            elif recipe.scope == "model":
+                values = model_values
+            else:
+                s, wb, cw_b = fit_block_scales(w2, uniform_values(),
+                                               quant.scale_block, colw)
+                z = (wb / s[..., None]).reshape(-1)
+                values = fit_codebook(z, _sample_weights(s, wb.shape, cw_b),
+                                      iters=recipe.kmeans_iters,
+                                      sample_limit=recipe.sample_limit)
+                Codebook(values=values).check()
+            qt = quantize_slice(w2, quant, values, col_weights=colw, H=H,
+                                recipe=recipe)
+            qt_uni = scales.quantize_int4(jnp.asarray(w2, jnp.float32),
+                                          quant.scale_block)
+            e_uni = float(scales.weighted_quantization_error(
+                jnp.asarray(w2, jnp.float32), qt_uni, colw))
+            e_new = float(scales.weighted_quantization_error(
+                jnp.asarray(w2, jnp.float32), qt, colw))
+            sum_uni += e_uni
+            sum_learned += e_new
+            leaf_uni += e_uni
+            leaf_new += e_new
+            n_leaves += 1
+            slices.append(qlinear.from_quantized(qt, quant))
+            values_out.append(values)
+        pstr = "/".join(path)
+        nslices = len(slices)
+        if stack_shape:
+            leaf = _stack_leaf(slices, stack_shape)
+            codebooks[pstr] = np.stack(values_out).reshape(*stack_shape,
+                                                           NLEVELS)
+        else:
+            leaf = slices[0]
+            codebooks[pstr] = values_out[0]
+        report[pstr] = {
+            "uniform_weighted_err": leaf_uni / nslices,
+            "learned_weighted_err": leaf_new / nslices,
+        }
+        return leaf
+
+    def walk(tree, path=()):
+        out = {}
+        for name, v in tree.items():
+            if name in QUANTIZABLE and isinstance(v, dict) and "w" in v:
+                out[name] = convert_leaf(path + (name,), name, v)
+            elif isinstance(v, dict):
+                out[name] = walk(v, path + (name,))
+            else:
+                out[name] = v
+        return out
+
+    new_params = walk(params)
+    report["aggregate"] = {
+        "num_linears": n_leaves,
+        "uniform_weighted_err": sum_uni / max(n_leaves, 1),
+        "learned_weighted_err": sum_learned / max(n_leaves, 1),
+    }
+    return CalibResult(params=new_params, quant=quant, codebooks=codebooks,
+                       report=report, collector=collector)

@@ -1,0 +1,68 @@
+"""Quality-eval harness: compare quantization recipes on the same footing.
+
+Metrics over a shared toy-corpus stream (data.SyntheticStream or explicit
+batches), always against the bf16 reference model:
+
+* perplexity   exp(masked token cross-entropy) on the stream's labels;
+* logit_mse    mean squared error of full-sequence logits vs reference;
+* top1_agree   fraction of positions whose argmax token matches reference.
+
+``compare`` evaluates a dict of named (params, cfg) variants so recipes
+(uniform int4, learned codebooks, GPTQ, ...) are directly comparable —
+benchmarks/quality_vs_bits.py records its output in BENCH_quality.json.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.calib.stats import batches_from as _batches_from
+from repro.models import transformer
+from repro.runtime.train import cross_entropy
+
+
+def _forward(params, cfg, batch):
+    logits, _ = transformer.forward(params, cfg, batch, mode="eval")
+    return logits
+
+
+def perplexity(params, cfg, data, *, steps: int = 2) -> float:
+    """exp(mean masked CE) over the stream (batches need 'labels')."""
+    ces = []
+    for batch in _batches_from(data, steps):
+        logits = _forward(params, cfg, batch)
+        ce, _ = cross_entropy(logits, batch["labels"])
+        ces.append(float(ce))
+    return float(np.exp(np.mean(ces)))
+
+
+def evaluate(params_ref, cfg_ref, params_q, cfg_q, data, *,
+             steps: int = 2) -> dict:
+    """One variant vs the bf16 reference.  Returns the metric dict."""
+    batches = _batches_from(data, steps)
+    ces, mses, agree = [], [], []
+    for batch in batches:
+        ref = _forward(params_ref, cfg_ref, batch)
+        got = _forward(params_q, cfg_q, batch)
+        ce, _ = cross_entropy(got, batch["labels"])
+        ces.append(float(ce))
+        mses.append(float(jnp.mean((got - ref) ** 2)))
+        agree.append(float(jnp.mean(
+            (jnp.argmax(got, -1) == jnp.argmax(ref, -1)).astype(jnp.float32))))
+    return {
+        "perplexity": float(np.exp(np.mean(ces))),
+        "logit_mse": float(np.mean(mses)),
+        "top1_agree": float(np.mean(agree)),
+    }
+
+
+def compare(params_ref, cfg_ref, variants: dict, data, *,
+            steps: int = 2) -> dict:
+    """variants: name -> (params, cfg).  Returns name -> metric dict,
+    including the reference itself under 'bf16'."""
+    out = {"bf16": evaluate(params_ref, cfg_ref, params_ref, cfg_ref, data,
+                            steps=steps)}
+    for name, (p, c) in variants.items():
+        out[name] = evaluate(params_ref, cfg_ref, p, c, data, steps=steps)
+    return out

@@ -1,0 +1,151 @@
+"""Activation-statistics collection for calibration.
+
+A :class:`StatsCollector` installs itself as the ``core.linear`` observer
+(core.linear.set_observer) and records, for every *tagged* linear apply,
+the input second moments over a small calibration stream:
+
+* diag  — per-input-channel ``E[x_j^2]`` (k,), the activation-aware error
+          weights for codebook fitting (AWQ-style importance);
+* full  — additionally the full second-moment matrix ``E[x x^T]`` (k, k),
+          the Hessian proxy GPTQ-lite's sequential error feedback needs.
+
+Recording happens through ``jax.debug.callback`` so it works identically
+whether the forward pass runs eagerly, under jit, inside the
+scan-over-layers (stats aggregate across the scanned groups — scanned
+layers of the same kind share one tag), or under the MoE expert vmap
+(batched callbacks fold their leading dims into the sample count).
+
+Stats are keyed by ``(tag, k)``: the tag is the linear's param-key name
+("wq", "up", "moe_down", ...) and k its input width, which disambiguates
+same-named linears of different width (dense vs expert FFNs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as qlinear
+from repro.models import transformer
+
+
+@dataclass
+class TagStats:
+    """Accumulated input moments for one (tag, k)."""
+
+    k: int
+    count: int = 0
+    sumsq: np.ndarray | None = None   # (k,) sum of x_j^2
+    outer: np.ndarray | None = None   # (k, k) sum of x x^T (mode='full')
+
+    @property
+    def second_moment(self) -> np.ndarray:
+        """diag E[x^2] (k,) — ones if nothing was recorded."""
+        if self.count == 0 or self.sumsq is None:
+            return np.ones((self.k,), np.float64)
+        return self.sumsq / self.count
+
+    @property
+    def hessian(self) -> np.ndarray | None:
+        """E[x x^T] (k, k) or None when collected in diag mode."""
+        if self.outer is None or self.count == 0:
+            return None
+        return self.outer / self.count
+
+
+class StatsCollector:
+    """Observer object for core.linear.set_observer."""
+
+    def __init__(self, mode: str = "diag"):
+        if mode not in ("diag", "full"):
+            raise ValueError(f"stats mode {mode!r}; one of ('diag', 'full')")
+        self.mode = mode
+        self.stats: dict[tuple[str, int], TagStats] = {}
+
+    # ---- traced side (called from core.linear.apply) -------------------
+    def record(self, tag: str, x: jnp.ndarray) -> None:
+        import functools
+
+        k = x.shape[-1]
+        xf = x.astype(jnp.float32).reshape(-1, k)
+        n = xf.shape[0]
+        ss = jnp.sum(xf * xf, axis=0)  # (k,)
+        # tag/k/n are static trace-time values: close over them (callback
+        # operands are converted to arrays, which must stay out of dict keys)
+        if self.mode == "full":
+            outer = xf.T @ xf  # (k, k)
+            jax.debug.callback(functools.partial(
+                self._accumulate_full, tag=tag, k=k, n=n), ss, outer)
+        else:
+            jax.debug.callback(functools.partial(
+                self._accumulate, tag=tag, k=k, n=n), ss)
+
+    # ---- host side -----------------------------------------------------
+    def _entry(self, tag: str, k: int) -> TagStats:
+        key = (tag, k)
+        if key not in self.stats:
+            self.stats[key] = TagStats(k=k)
+        return self.stats[key]
+
+    def _accumulate(self, ss, *, tag: str, k: int, n: int) -> None:
+        # Under vmap the callback receives batched sums: fold the extra
+        # leading dims into the sample count (n rows per batch element).
+        arr = np.asarray(ss, np.float64).reshape(-1, k)
+        e = self._entry(tag, k)
+        e.sumsq = arr.sum(0) if e.sumsq is None else e.sumsq + arr.sum(0)
+        e.count += n * arr.shape[0]
+
+    def _accumulate_full(self, ss, outer, *, tag: str, k: int, n: int) -> None:
+        self._accumulate(ss, tag=tag, k=k, n=n)
+        o = np.asarray(outer, np.float64).reshape(-1, k, k).sum(0)
+        e = self._entry(tag, k)
+        e.outer = o if e.outer is None else e.outer + o
+
+    # ---- lookup --------------------------------------------------------
+    def get(self, tag: str, k: int) -> TagStats:
+        return self.stats.get((tag, k), TagStats(k=k))
+
+    def second_moment(self, tag: str, k: int) -> np.ndarray:
+        return self.get(tag, k).second_moment
+
+
+def batches_from(data, steps: int) -> list:
+    """Normalize a calibration/eval data source to a list of batch dicts:
+    a data.SyntheticStream-like object (has host_batch), a single batch
+    dict, or any iterable of batch dicts."""
+    if hasattr(data, "host_batch"):
+        return [{k: jnp.asarray(v) for k, v in data.host_batch(s).items()}
+                for s in range(steps)]
+    if isinstance(data, dict):
+        return [data]
+    return list(data)
+
+
+@contextlib.contextmanager
+def observing(collector: StatsCollector):
+    """Install ``collector`` as the linear observer for the with-block."""
+    qlinear.set_observer(collector)
+    try:
+        yield collector
+    finally:
+        qlinear.set_observer(None)
+
+
+def collect(params, cfg, batches, *, mode: str = "diag") -> StatsCollector:
+    """Run calibration batches through the (bf16) model and collect
+    per-linear input moments.
+
+    ``batches``: an iterable of model batch dicts (``{"tokens": ...}``),
+    e.g. a few steps of data.SyntheticStream.  The forward runs in 'eval'
+    mode (no remat) purely for its side effect on the collector.
+    """
+    collector = StatsCollector(mode=mode)
+    with observing(collector):
+        for batch in batches:
+            logits, _ = transformer.forward(params, cfg, batch, mode="eval")
+            jax.block_until_ready(logits)  # flush pending debug callbacks
+    return collector

@@ -11,4 +11,7 @@ Public API:
 from repro.core import complexity, linear, lut, packing, scales  # noqa: F401
 from repro.core.linear import DENSE, QuantConfig  # noqa: F401
 from repro.core.lut import msgemm, msgemm_reference, produce, consume  # noqa: F401
-from repro.core.scales import quantize_int4, dequantize, QuantizedTensor  # noqa: F401
+from repro.core.scales import (  # noqa: F401
+    quantize_int4, quantize_codebook, dequantize, QuantizedTensor,
+    weighted_quantization_error,
+)

@@ -38,6 +38,12 @@ import jax.numpy as jnp
 from repro.core import lut, packing, scales
 
 
+_MODES = ("bf16", "int4_dequant", "msgemm")
+_STORAGES = ("packed_idx", "packed_u8")
+_IMPLS = ("jnp", "pallas")
+_CODEBOOKS = ("none", "learned")
+
+
 @dataclass(frozen=True)
 class QuantConfig:
     mode: str = "bf16"  # bf16 | int4_dequant | msgemm
@@ -55,16 +61,44 @@ class QuantConfig:
     # backend (compiled on TPU, interpreter elsewhere); set explicitly to
     # force either mode (e.g. interpret=True to debug on TPU).
     interpret: bool | None = None
+    # 'learned' gives every quantized linear a 16-entry value codebook
+    # leaf (repro.calib fits them; init seeds the uniform int4 table so
+    # checkpoint trees always match).  'none' is the plain int4 grid.
+    codebook: str = "none"  # none | learned
 
     def __post_init__(self):
-        if self.mode not in ("bf16", "int4_dequant", "msgemm"):
-            raise ValueError(f"unknown quant mode {self.mode}")
+        # Eager validation: every config invariant the quantized paths
+        # rely on is checked here, at construction, instead of surfacing
+        # as a shape error deep inside consume()/the Pallas kernel.
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown quant mode {self.mode!r}; one of {_MODES}")
+        if self.storage not in _STORAGES:
+            raise ValueError(
+                f"unknown storage {self.storage!r}; one of {_STORAGES}")
+        if self.impl not in _IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; one of {_IMPLS}")
+        if self.codebook not in _CODEBOOKS:
+            raise ValueError(
+                f"unknown codebook policy {self.codebook!r}; one of {_CODEBOOKS}")
+        if self.d != "adaptive":
+            if not isinstance(self.d, int) or not 1 <= self.d <= 4:
+                raise ValueError(
+                    f"LUT depth d={self.d!r} must be 'adaptive' or an int in "
+                    "[1, 4] (the 16^d LUT is produced in full)")
+        if self.consume_chunk < 1:
+            raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
+        if self.scale_block < 0:
+            raise ValueError(f"scale_block={self.scale_block} must be >= 0")
         if self.d != "adaptive" and self.scale_block == 0:
             object.__setattr__(self, "scale_block", 12 * int(self.d))
         elif self.scale_block == 0:
             object.__setattr__(self, "scale_block", 12)
-        if self.mode == "msgemm" and self.d != "adaptive":
-            scales.check_applicable(self.scale_block, int(self.d))
+        if self.mode == "msgemm":
+            # §3.3 applicability — for adaptive d the block must compose
+            # with the smallest candidate depth (resolve_d only shrinks d
+            # until it divides the block, so d=2 is the floor).
+            scales.check_applicable(
+                self.scale_block, 2 if self.d == "adaptive" else int(self.d))
 
     def resolve_d(self, in_dim: int, out_dim: int) -> int:
         """The depth this linear actually uses (static in the shapes)."""
@@ -81,6 +115,20 @@ class QuantConfig:
 
 DENSE = QuantConfig(mode="bf16")
 
+# Optional activation-statistics observer (repro.calib.stats installs one
+# during calibration via set_observer; None costs nothing).  Kept here so
+# core never imports calib.
+_OBSERVER = None
+
+
+def set_observer(obs) -> None:
+    """Install (or clear, with None) the linear-input observer.  While set,
+    every tagged apply() reports its input activations to
+    ``obs.record(tag, x)`` — the hook repro.calib.stats collects per-linear
+    input second moments through."""
+    global _OBSERVER
+    _OBSERVER = obs
+
 
 def init(key, in_dim: int, out_dim: int, cfg: QuantConfig = DENSE, *,
          dtype=jnp.float32, init_scale: float | None = None) -> dict:
@@ -92,24 +140,51 @@ def init(key, in_dim: int, out_dim: int, cfg: QuantConfig = DENSE, *,
     return from_dense(w, cfg, dtype=dtype)
 
 
-def from_dense(w: jnp.ndarray, cfg: QuantConfig = DENSE, *, dtype=jnp.float32) -> dict:
-    """Build this layer's params from a dense (out, in) weight matrix."""
-    out_dim, in_dim = w.shape
+def from_dense(w: jnp.ndarray, cfg: QuantConfig = DENSE, *,
+               dtype=jnp.float32, codebook=None) -> dict:
+    """Build this layer's params from a dense (out, in) weight matrix.
+
+    ``codebook``: optional (16,) value table.  With cfg.codebook='learned'
+    and no explicit table, the uniform int4 values are stored as a
+    placeholder so param-tree structure is calibration-independent
+    (checkpoint restore targets always match).
+    """
     if cfg.mode == "bf16":
         return {"w": w.astype(dtype)}
-    qt = scales.quantize_int4(w, cfg.scale_block)
+    if codebook is None and cfg.codebook == "learned":
+        codebook = packing.b_values(jnp.float32)
+    if codebook is not None:
+        qt = scales.quantize_codebook(w, codebook, cfg.scale_block)
+    else:
+        qt = scales.quantize_int4(w, cfg.scale_block)
+    return from_quantized(qt, cfg)
+
+
+def from_quantized(qt: scales.QuantizedTensor, cfg: QuantConfig) -> dict:
+    """Param dict from an already-quantized tensor (calib's GPTQ path
+    produces codes directly; from_dense routes through here too)."""
+    out_dim, in_dim = qt.shape
     p: dict[str, Any] = {"scales": qt.scales.astype(jnp.float32)}
     if cfg.storage == "packed_idx":
         p["idx"] = packing.pack_indices(qt.codes,
                                         cfg.resolve_d(in_dim, out_dim))
     else:
         p["u8"] = packing.pack_storage(qt.codes)
+    if qt.codebook is not None:
+        p["codebook"] = jnp.asarray(qt.codebook, jnp.float32)
     return p
 
 
 def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
-          in_dim: int | None = None, precision=None) -> jnp.ndarray:
-    """x (..., in) -> y (..., out)."""
+          in_dim: int | None = None, precision=None,
+          tag: str | None = None) -> jnp.ndarray:
+    """x (..., in) -> y (..., out).
+
+    ``tag`` names this linear for the activation-statistics observer
+    (calibration); it does not affect the computation.
+    """
+    if _OBSERVER is not None and tag is not None:
+        _OBSERVER.record(tag, x)
     if cfg.mode == "bf16":
         w = params["w"]
         return jax.lax.dot_general(
@@ -119,11 +194,12 @@ def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
     k = in_dim if in_dim is not None else _infer_k(params, cfg)
     m = params["scales"].shape[0]
     d = cfg.resolve_d(k, m)
+    codebook = params.get("codebook")
     if cfg.mode == "int4_dequant":
         codes = _codes(params, cfg, k, d)
         qt = scales.QuantizedTensor(
             codes=codes, scales=params["scales"], block=cfg.scale_block,
-            shape=(codes.shape[0], k))
+            shape=(codes.shape[0], k), codebook=codebook)
         w = scales.dequantize(qt, x.dtype)
         return jax.lax.dot_general(
             x, w, (((x.ndim - 1,), (1,)), ((), ())),
@@ -138,12 +214,12 @@ def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
         y = kops.msgemm(
             codes, x.reshape(-1, k).T, d,
             scales=params["scales"], scale_block=cfg.scale_block,
-            interpret=cfg.interpret)
+            codebook=codebook, interpret=cfg.interpret)
         return y.T.reshape(*batch, -1).astype(x.dtype)
 
     batch = x.shape[:-1]
     xt = x.reshape(-1, k).T  # (k, B) — the paper's column layout
-    lut_t = lut.produce(xt, d, dtype=jnp.float32)
+    lut_t = lut.produce(xt, d, dtype=jnp.float32, codebook=codebook)
     idx = params["idx"] if cfg.storage == "packed_idx" else (
         packing.indices_from_storage(params["u8"], d, k))
     y = lut.consume(

@@ -25,7 +25,7 @@ from repro.core import packing
 
 
 @functools.lru_cache(maxsize=8)
-def _tuple_basis_np(d: int):
+def _tuple_codes_np(d: int):
     import numpy as np
 
     n = packing.NLEVELS**d
@@ -34,21 +34,39 @@ def _tuple_basis_np(d: int):
     for r in range(d):
         shift = 4 * (d - 1 - r)
         cols.append((idx >> shift) & 0xF)
-    codes = np.stack(cols, axis=1)  # (16^d, d) codes, big-endian
+    return np.stack(cols, axis=1)  # (16^d, d) codes, big-endian
+
+
+@functools.lru_cache(maxsize=8)
+def _tuple_basis_np(d: int):
+    import numpy as np
+
+    codes = _tuple_codes_np(d)
     vals = np.where(codes <= packing.INT4_MAX, codes, codes - packing.NLEVELS)
     return vals.astype(np.float32)
 
 
-def tuple_basis(d: int, dtype=jnp.float32) -> jnp.ndarray:
-    """B_d (16^d, d): row ``i`` holds (b(i_0), ..., b(i_{d-1})) for flat index i."""
-    return jnp.asarray(_tuple_basis_np(d), dtype=dtype)
+def tuple_basis(d: int, dtype=jnp.float32, *, codebook=None) -> jnp.ndarray:
+    """C_d (16^d, d): row ``i`` holds (C(i_0), ..., C(i_{d-1})) for flat index i.
+
+    ``codebook`` is an optional (16,) value table replacing the uniform
+    two's-complement map ``b`` — nothing in Eq. 5 requires the 16 levels
+    to be the int4 grid, so an arbitrary learned codebook (repro.calib)
+    rides through produce/consume at zero extra cost.  ``codebook[0]``
+    must be 0 (code 0 is the k-padding code; see core.packing).
+    """
+    if codebook is None:
+        return jnp.asarray(_tuple_basis_np(d), dtype=dtype)
+    cb = jnp.asarray(codebook, dtype)
+    return jnp.take(cb, jnp.asarray(_tuple_codes_np(d), jnp.int32), axis=0)
 
 
-def produce(x: jnp.ndarray, d: int, *, dtype=None) -> jnp.ndarray:
+def produce(x: jnp.ndarray, d: int, *, dtype=None, codebook=None) -> jnp.ndarray:
     """Phase 1.  x (k, b) -> L (16^d, k/d, b).
 
-    Equivalent to Eq. 3, evaluated as the single matmul B_d @ x_chunks
-    (MXU-native).  Cost: 16^d * k * b FMAs == C(L)·b of Eq. 7.
+    Equivalent to Eq. 3, evaluated as the single matmul C_d @ x_chunks
+    (MXU-native).  Cost: 16^d * k * b FMAs == C(L)·b of Eq. 7 — identical
+    for the uniform int4 basis and a learned ``codebook`` basis.
     """
     if x.ndim == 1:
         x = x[:, None]
@@ -56,7 +74,7 @@ def produce(x: jnp.ndarray, d: int, *, dtype=None) -> jnp.ndarray:
     xp = packing.pad_k(x, d, axis=0)
     kc = xp.shape[0] // d
     x_chunks = xp.reshape(kc, d, b)  # (k/d, d, b)
-    basis = tuple_basis(d, dtype=dtype or x.dtype)
+    basis = tuple_basis(d, dtype=dtype or x.dtype, codebook=codebook)
     # (16^d, d) @ (d, k/d * b) -> (16^d, k/d, b)
     lut = jax.lax.dot_general(
         basis,
@@ -134,26 +152,31 @@ def msgemm(
     scale_block: int | None = None,
     chunk: int = 1,
     dtype=None,
+    codebook=None,
 ) -> jnp.ndarray:
     """Full two-phase msGeMM: y = dequant(codes) @ x (paper Eq. 1/5).
 
     codes (m, k) uint8 4-bit codes; x (k, b) or (k,).  Returns (m, b)/(m,).
+    ``codebook``: optional (16,) learned value table (uniform int4 when None).
     """
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
-    lut = produce(x, d, dtype=dtype)
+    lut = produce(x, d, dtype=dtype, codebook=codebook)
     idx = packing.pack_indices(codes, d)
     y = consume(lut, idx, scales=scales, scale_block=scale_block, d=d, chunk=chunk)
     return y[:, 0] if squeeze else y
 
 
-def msgemm_reference(codes, x, d, *, scales=None, scale_block=None):
+def msgemm_reference(codes, x, d, *, scales=None, scale_block=None,
+                     codebook=None):
     """Naive O(m·k·b) oracle: dequantize then dense matmul (paper Eq. 14 path)."""
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
-    w = packing.b_values(x.dtype)[jnp.asarray(codes, jnp.int32)]  # (m, k)
+    values = (packing.b_values(x.dtype) if codebook is None
+              else jnp.asarray(codebook, x.dtype))
+    w = values[jnp.asarray(codes, jnp.int32)]  # (m, k)
     if scales is not None:
         q = jnp.repeat(scales, scale_block, axis=1)[:, : w.shape[1]]
         w = w * q

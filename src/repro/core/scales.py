@@ -23,18 +23,22 @@ from repro.core import packing
 
 
 class QuantizedTensor(NamedTuple):
-    """Row-block int4 quantized matrix (m, k).
+    """Row-block 4-bit quantized matrix (m, k).
 
     codes:      (m, k) uint8, 4-bit codes (canonical)
     scales:     (m, k//block) float32, shared per row-block (§3.3)
     block:      scale block size r along k
     shape:      original (m, k)
+    codebook:   optional (16,) float32 value table (repro.calib learned
+                codebooks); None means the uniform two's-complement int4
+                grid.  Entry 0 must be 0.0 (code 0 is the padding code).
     """
 
     codes: jnp.ndarray
     scales: jnp.ndarray
     block: int
     shape: tuple
+    codebook: jnp.ndarray | None = None
 
 
 def check_applicable(block: int, d: int, axis: str = "row") -> None:
@@ -74,13 +78,56 @@ def quantize_int4(
     return QuantizedTensor(codes=codes, scales=scale, block=block, shape=(m, k))
 
 
+def quantize_codebook(
+    w: jnp.ndarray, codebook, block: int = 32
+) -> QuantizedTensor:
+    """Row-block quantization of (m, k) onto a 16-entry value ``codebook``.
+
+    Scales use the same bounding-box normalization as :func:`quantize_int4`
+    (``amax / 7``), so a codebook fit and the uniform grid are compared on
+    identical scale grids; codes are nearest-entry assignments of the
+    normalized values.  ``codebook[0]`` must be 0 so zero-padded columns
+    (code 0) contribute nothing downstream.
+    """
+    m, k = w.shape
+    kp = -(-k // block) * block
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, kp - k)))
+    wb = wp.reshape(m, kp // block, block)
+    amax = jnp.max(jnp.abs(wb), axis=-1)
+    scale = amax / packing.INT4_MAX
+    scale = jnp.where(amax == 0, 1.0, scale)
+    cb = jnp.asarray(codebook, jnp.float32)
+    z = wb / scale[..., None]
+    codes = jnp.argmin(jnp.abs(z[..., None] - cb), axis=-1).astype(jnp.uint8)
+    return QuantizedTensor(codes=codes.reshape(m, kp)[:, :k], scales=scale,
+                           block=block, shape=(m, k), codebook=cb)
+
+
 def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
     """Reconstruct the dense matrix (the int4_dequant baseline path)."""
     m, k = qt.shape
-    vals = packing.b_values(jnp.float32)[jnp.asarray(qt.codes, jnp.int32)]
+    values = (packing.b_values(jnp.float32) if qt.codebook is None
+              else jnp.asarray(qt.codebook, jnp.float32))
+    vals = jnp.take(values, jnp.asarray(qt.codes, jnp.int32), axis=0)
     q = jnp.repeat(qt.scales, qt.block, axis=1)[:, :k]
     return (vals * q).astype(dtype)
 
 
 def quantization_error(w: jnp.ndarray, qt: QuantizedTensor) -> jnp.ndarray:
     return jnp.max(jnp.abs(w - dequantize(qt, w.dtype)))
+
+
+def weighted_quantization_error(
+    w: jnp.ndarray, qt: QuantizedTensor, col_weights: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Activation-aware reconstruction error: mean over rows of
+    ``sum_j cw_j (w_ij - deq_ij)^2 / sum_j cw_j`` — the proxy for the
+    layer-output MSE ``E||(W - Q)x||^2`` under diagonal input second
+    moments ``cw_j = E[x_j^2]`` (repro.calib's fitting objective).
+    """
+    err = (w.astype(jnp.float32) - dequantize(qt, jnp.float32)) ** 2
+    if col_weights is None:
+        return jnp.mean(err)
+    cw = jnp.asarray(col_weights, jnp.float32)
+    cw = cw / jnp.maximum(jnp.sum(cw), 1e-30)
+    return jnp.mean(jnp.sum(err * cw[None, :], axis=1))

@@ -238,6 +238,8 @@ def _leaf_axes(path: tuple, leaf_ndim: int) -> tuple:
             axes = base
         elif leaf == "scales":
             axes = (base[0], "scales")
+        elif leaf == "codebook":
+            axes = ("scales",)  # 16-entry value table: replicated
         elif leaf in ("b", "bias"):
             axes = (base[0],)
         else:

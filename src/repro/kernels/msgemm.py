@@ -78,6 +78,7 @@ def msgemm_pallas(
     idx: jnp.ndarray,      # (m, kc) int32 packed LUT indices
     x: jnp.ndarray,        # (k_pad = kc*d, b)
     scales: jnp.ndarray,   # (m, kc*d // scale_block)
+    codebook: jnp.ndarray | None = None,  # optional (16,) value table
     *,
     d: int,
     scale_block: int,
@@ -88,6 +89,12 @@ def msgemm_pallas(
     acc_dtype=jnp.float32,
 ) -> jnp.ndarray:
     """y (m, b) = dequant(codes) @ x via the fused produce+consume kernel.
+
+    ``codebook`` swaps the uniform int4 tuple basis for a learned 16-entry
+    one (repro.calib) — the kernel body is untouched: the basis matrix is
+    already an operand, so non-uniform codebooks are literally zero extra
+    kernel cost (the issue's point about Eq. 5 never requiring the uniform
+    grid).  ``codebook[0]`` must be 0 (padding rows/chunks use index 0).
 
     ``interpret=None`` auto-detects: compiled on TPU, interpreter
     elsewhere (CPU/GPU have no Mosaic lowering for this kernel).
@@ -105,7 +112,7 @@ def msgemm_pallas(
     assert (tj * d) % scale_block == 0, "factored-scale tiling (§3.3)"
     assert m % tm == 0 and kc % tj == 0 and b % tb == 0, (m, kc, b, tm, tj, tb)
     sj = tj * d // scale_block
-    basis = lut_mod.tuple_basis(d, dtype=acc_dtype)
+    basis = lut_mod.tuple_basis(d, dtype=acc_dtype, codebook=codebook)
     n = basis.shape[0]
 
     grid = (b // tb, m // tm, kc // tj)

@@ -40,10 +40,13 @@ def _pick_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
 
 def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
            scales: jnp.ndarray | None = None, scale_block: int = 36,
+           codebook: jnp.ndarray | None = None,
            interpret: bool | None = None) -> jnp.ndarray:
     """y (m, b) = dequant(codes (m,k)) @ x (k, b) via the fused kernel.
 
-    Pads every dim to tile multiples; zero code rows/cols contribute 0.
+    Pads every dim to tile multiples; zero code rows/cols contribute 0
+    (codebooks pin value 0 at code 0, so this holds for learned tables
+    too).  ``codebook``: optional (16,) non-uniform value table.
     """
     m, k = codes.shape
     squeeze = x.ndim == 1
@@ -64,7 +67,8 @@ def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
     sc_p = jnp.pad(scales.astype(jnp.float32),
                    ((0, mp - m), (0, sj - scales.shape[1])))
     y = _ms.msgemm_pallas(
-        idx_p, x_p, sc_p, d=d, scale_block=scale_block, tm=tm, tj=tj, tb=tb,
+        idx_p, x_p, sc_p, codebook, d=d, scale_block=scale_block,
+        tm=tm, tj=tj, tb=tb,
         interpret=_interpret() if interpret is None else interpret)
     y = y[:m, :b]
     return y[:, 0] if squeeze else y

@@ -13,11 +13,11 @@ from repro.core import lut, packing
 
 
 def msgemm_ref(idx: jnp.ndarray, x: jnp.ndarray, scales: jnp.ndarray, *,
-               d: int, scale_block: int) -> jnp.ndarray:
-    """Oracle for kernels.msgemm.msgemm_pallas (paper Eq. 5 with §3.3 scales)."""
-    k = x.shape[0]
-    codes = packing.unpack_indices(idx, d, k)
-    table = lut.produce(x.astype(jnp.float32), d, dtype=jnp.float32)
+               d: int, scale_block: int, codebook=None) -> jnp.ndarray:
+    """Oracle for kernels.msgemm.msgemm_pallas (paper Eq. 5 with §3.3 scales,
+    optionally over a learned 16-entry codebook basis)."""
+    table = lut.produce(x.astype(jnp.float32), d, dtype=jnp.float32,
+                        codebook=codebook)
     return lut.consume(
         table, idx, scales=scales, scale_block=scale_block, d=d)
 

@@ -43,8 +43,10 @@ def linear_init(key, in_dim, out_dim, cfg, quant=qlinear.DENSE, *, scale=None):
                         dtype=jnp.dtype(cfg.param_dtype), init_scale=scale)
 
 
-def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None):
-    return qlinear.apply(p, x, quant, in_dim=in_dim)
+def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None, tag=None):
+    """``tag`` names the linear for calibration's activation-statistics
+    observer (repro.calib.stats); it never changes the computation."""
+    return qlinear.apply(p, x, quant, in_dim=in_dim, tag=tag)
 
 
 def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
@@ -100,11 +102,11 @@ def mlp_apply(p: dict, x: jnp.ndarray, cfg, quant=None) -> jnp.ndarray:
     q = quant if quant is not None else cfg.quant
     d_ff_act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
                 "gelu": jax.nn.gelu}[cfg.mlp_activation]
-    up = linear_apply(p["up"], x, q, in_dim=cfg.d_model)
+    up = linear_apply(p["up"], x, q, in_dim=cfg.d_model, tag="up")
     if "gate" in p:
-        gate = linear_apply(p["gate"], x, q, in_dim=cfg.d_model)
+        gate = linear_apply(p["gate"], x, q, in_dim=cfg.d_model, tag="gate")
         h = d_ff_act(gate) * up
     else:
         h = d_ff_act(up)
     h = constrain(h, *(("batch",) + ("seq",) * (h.ndim - 2) + ("mlp",)))
-    return linear_apply(p["down"], h, q, in_dim=h.shape[-1])
+    return linear_apply(p["down"], h, q, in_dim=h.shape[-1], tag="down")

@@ -45,9 +45,12 @@ def attn_init(key, cfg, *, cross: bool = False) -> dict:
 def _qkv(p, cfg, xq, xkv, positions_q, positions_kv, *, rope=True):
     B = xq.shape[0]
     h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = common.linear_apply(p["wq"], xq, cfg.quant, in_dim=cfg.d_model)
-    k = common.linear_apply(p["wk"], xkv, cfg.quant, in_dim=cfg.d_model)
-    v = common.linear_apply(p["wv"], xkv, cfg.quant, in_dim=cfg.d_model)
+    q = common.linear_apply(p["wq"], xq, cfg.quant, in_dim=cfg.d_model,
+                            tag="wq")
+    k = common.linear_apply(p["wk"], xkv, cfg.quant, in_dim=cfg.d_model,
+                            tag="wk")
+    v = common.linear_apply(p["wv"], xkv, cfg.quant, in_dim=cfg.d_model,
+                            tag="wv")
     q = q.reshape(B, -1, h, dh)
     k = k.reshape(B, -1, hk, dh)
     v = v.reshape(B, -1, hk, dh)
@@ -126,7 +129,7 @@ def attn_apply(p, cfg, x, positions, *, window: int = 0,
             m = pm if m is None else (m & pm)
         out = _sdpa(cfg, q, k, v, m)
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim)
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
     out = constrain(out, "batch", "seq", "embed")
     return (out, k, v) if return_kv else out
 
@@ -176,7 +179,7 @@ def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
     m = view_mask(Skv, pos[:, None], window=window)[:, 0]
     out = _sdpa(cfg, q, new_k, new_v, m[:, None, None, :])
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim)
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
     return out, new_k, new_v
 
 
@@ -210,7 +213,7 @@ def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
     m = view_mask(view_slots.shape[1], positions, window=window)
     out = _sdpa(cfg, q, k_view, v_view, m[:, None])
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim)
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
     return out, kp.reshape(nb, bs, hk, dh), vp.reshape(nb, bs, hk, dh)
 
 
@@ -218,11 +221,12 @@ def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions):
     """Decoder cross-attention against precomputed encoder K/V."""
     B = x.shape[0]
     h, dh = cfg.num_heads, cfg.head_dim
-    q = common.linear_apply(p["wq"], x, cfg.quant, in_dim=cfg.d_model)
+    q = common.linear_apply(p["wq"], x, cfg.quant, in_dim=cfg.d_model,
+                            tag="wq")
     q = q.reshape(B, -1, h, dh)
     out = _sdpa(cfg, q, enc_k, enc_v, None)
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim)
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
     return out
 
 
@@ -230,6 +234,8 @@ def cross_kv(p, cfg, enc_out):
     """Project encoder output once; cached for all decode steps."""
     B = enc_out.shape[0]
     hk, dh = cfg.num_kv_heads, cfg.head_dim
-    k = common.linear_apply(p["wk"], enc_out, cfg.quant, in_dim=cfg.d_model)
-    v = common.linear_apply(p["wv"], enc_out, cfg.quant, in_dim=cfg.d_model)
+    k = common.linear_apply(p["wk"], enc_out, cfg.quant, in_dim=cfg.d_model,
+                            tag="wk")
+    v = common.linear_apply(p["wv"], enc_out, cfg.quant, in_dim=cfg.d_model,
+                            tag="wv")
     return k.reshape(B, -1, hk, dh), v.reshape(B, -1, hk, dh)

@@ -54,7 +54,8 @@ def _causal_conv(x, w, b, tail=None):
 def _ssm_params(p, cfg, xc):
     """xc (B, L, di) -> dt (B,L,di), B/C (B,L,N)."""
     n, dr = cfg.mamba_d_state, cfg.dt_rank
-    proj = common.linear_apply(p["x_proj"], xc, cfg.quant, in_dim=xc.shape[-1])
+    proj = common.linear_apply(p["x_proj"], xc, cfg.quant,
+                               in_dim=xc.shape[-1], tag="x_proj")
     dtr, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dr, dr + n], axis=-1)
     dt = jax.nn.softplus(dtr @ p["dt_proj"]["w"].T + p["dt_proj"]["b"])
     return dt, Bm, Cm
@@ -98,7 +99,8 @@ def _scan_chunked(dA, dBu, C, h0, chunk):
 def mamba_apply(p, cfg, x, *, state=None):
     """Full-sequence pass. x (B, L, d) -> (y, final_state)."""
     di = cfg.mamba_d_inner
-    xz = common.linear_apply(p["in_proj"], x, cfg.quant, in_dim=cfg.d_model)
+    xz = common.linear_apply(p["in_proj"], x, cfg.quant,
+                             in_dim=cfg.d_model, tag="in_proj")
     xs, z = jnp.split(xz, 2, axis=-1)
     xs = constrain(xs, "batch", "seq", "mamba_inner")
     conv_state = state["conv"] if state is not None else None
@@ -114,7 +116,8 @@ def mamba_apply(p, cfg, x, *, state=None):
     y, h_last = _scan_chunked(dA, dBu, Cm, h0, cfg.mamba_chunk)
     y = y + p["D"] * xf
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = common.linear_apply(p["out_proj"], y, cfg.quant, in_dim=di)
+    out = common.linear_apply(p["out_proj"], y, cfg.quant, in_dim=di,
+                              tag="out_proj")
     return constrain(out, "batch", "seq", "embed"), {
         "ssm": h_last, "conv": new_tail}
 

@@ -59,19 +59,21 @@ def _expert_ffn(pe: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
     q = cfg.quant
     if q.mode == "msgemm":
         q = dataclasses.replace(q, mode="int4_dequant")
-    apply_e = jax.vmap(lambda p, xx: common.linear_apply(p, xx, q,
-                                                         in_dim=x.shape[-1]))
-    up = apply_e(pe["up"], x)
+    def apply_e(tag):
+        # 'moe_'-prefixed tags keep expert input stats separate from the
+        # dense MLPs' in the calibration collector
+        return jax.vmap(lambda p, xx: common.linear_apply(
+            p, xx, q, in_dim=xx.shape[-1], tag=f"moe_{tag}"))
+
+    up = apply_e("up")(pe["up"], x)
     act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
            "gelu": jax.nn.gelu}[cfg.mlp_activation]
     if "gate" in pe:
-        h = act(apply_e(pe["gate"], x)) * up
+        h = act(apply_e("gate")(pe["gate"], x)) * up
     else:
         h = act(up)
     h = constrain(h, "expert", "capacity", "expert_out")
-    down = jax.vmap(lambda p, xx: common.linear_apply(p, xx, q,
-                                                      in_dim=h.shape[-1]))
-    return down(pe["down"], h)
+    return apply_e("down")(pe["down"], h)
 
 
 def moe_apply(p: dict, x: jnp.ndarray, cfg, *, capacity: int | None = None):

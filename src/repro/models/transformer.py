@@ -297,7 +297,7 @@ def logits_from_hidden(params, cfg: ModelConfig, x) -> jnp.ndarray:
                             params["embedding"].astype(jnp.float32))
     else:
         logits = common.linear_apply(params["lm_head"], x, cfg.quant,
-                                     in_dim=cfg.d_model).astype(jnp.float32)
+                                     in_dim=cfg.d_model, tag="lm_head").astype(jnp.float32)
     logits = common.softcap(logits, cfg.final_logit_softcap)
     return constrain(logits, "batch", "seq", "vocab")
 

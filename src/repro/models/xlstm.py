@@ -167,7 +167,8 @@ def mlstm_block_apply(p, cfg, x, *, state=None):
     di = int(d * cfg.xlstm_proj_factor)
     dh = di // H
     h_in = common.norm_apply(p["norm"], x, cfg.norm)
-    ab = common.linear_apply(p["xl_up"], h_in, cfg.quant, in_dim=d)
+    ab = common.linear_apply(p["xl_up"], h_in, cfg.quant, in_dim=d,
+                             tag="xl_up")
     a, b = jnp.split(ab, 2, axis=-1)
     a = constrain(a, "batch", "seq", "xl_inner")
     from repro.models.mamba import _causal_conv  # shared depthwise conv
@@ -183,7 +184,8 @@ def mlstm_block_apply(p, cfg, x, *, state=None):
     it = gates[..., :H]
     ft = jax.nn.log_sigmoid(gates[..., H:])
     o = jax.nn.sigmoid(common.linear_apply(p["xl_o"], h_in, cfg.quant,
-                                           in_dim=d).astype(jnp.float32))
+                                           in_dim=d, tag="xl_o")
+                       .astype(jnp.float32))
     st = (state["C"], state["n"], state["m"]) if state is not None else (
         jnp.zeros((B, H, dh, dh), jnp.float32),
         jnp.zeros((B, H, dh), jnp.float32),
@@ -196,7 +198,8 @@ def mlstm_block_apply(p, cfg, x, *, state=None):
     # learnable skip from the conv branch
     hseq = (hseq + p["lskip"] * ac.astype(jnp.float32)).astype(x.dtype)
     out = hseq * jax.nn.silu(b)
-    out = common.linear_apply(p["xl_down"], out, cfg.quant, in_dim=di)
+    out = common.linear_apply(p["xl_down"], out, cfg.quant, in_dim=di,
+                               tag="xl_down")
     return x + constrain(out, "batch", "seq", "embed"), {
         "C": C, "n": n, "m": m, "conv": new_tail}
 

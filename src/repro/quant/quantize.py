@@ -24,22 +24,44 @@ QUANTIZABLE = {
 }
 
 
-def _convert(w, quant: QuantConfig):
+def _convert(w, quant: QuantConfig, codebook=None):
     if w.ndim == 2:
-        return qlinear.from_dense(w, quant)
-    # stacked leading dims (scan groups / experts): vmap the conversion
-    return jax.vmap(lambda ww: _convert(ww, quant))(w)
+        return qlinear.from_dense(w, quant, codebook=codebook)
+    # stacked leading dims (scan groups / experts): vmap the conversion,
+    # mapping per-slice codebooks alongside when they are stacked too
+    if codebook is not None and codebook.ndim > 1:
+        return jax.vmap(lambda ww, cb: _convert(ww, quant, cb))(w, codebook)
+    return jax.vmap(lambda ww: _convert(ww, quant, codebook))(w)
+
+
+def _codebook_for(codebooks, path: tuple):
+    if codebooks is None:
+        return None
+    if isinstance(codebooks, dict):
+        cb = codebooks.get("/".join(path), codebooks.get(path))
+        return None if cb is None else jax.numpy.asarray(cb)
+    return jax.numpy.asarray(codebooks)  # one shared table for every leaf
 
 
 def quantize_model(params: dict, cfg: ModelConfig, quant: QuantConfig,
-                   *, path=()) -> dict:
-    """Return a new param tree for ``cfg.with_quant(quant.mode)`` serving."""
+                   *, codebooks=None, path=()) -> dict:
+    """Return a new param tree for ``cfg.with_quant(quant.mode)`` serving.
+
+    ``codebooks``: optional learned value tables (repro.calib) — a single
+    (16,) array shared model-wide, or a dict mapping 'a/b/leaf' path
+    strings (or path tuples) to per-leaf (..., 16) tables; stacked leading
+    dims must match the leaf's scan/expert stacking.  Leaves without an
+    entry fall back to cfg-driven behavior (uniform placeholder table
+    when quant.codebook='learned', plain int4 otherwise).
+    """
     out = {}
     for k, v in params.items():
         if k in QUANTIZABLE and isinstance(v, dict) and "w" in v:
-            out[k] = _convert(v["w"], quant)
+            out[k] = _convert(v["w"], quant,
+                              _codebook_for(codebooks, path + (k,)))
         elif isinstance(v, dict):
-            out[k] = quantize_model(v, cfg, quant, path=path + (k,))
+            out[k] = quantize_model(v, cfg, quant, codebooks=codebooks,
+                                    path=path + (k,))
         else:
             out[k] = v
     return out

@@ -1,0 +1,316 @@
+"""Calibration & codebook subsystem: codebook round-trips and degenerate
+equivalence with uniform int4, codebook msGeMM vs dense oracle (jnp +
+Pallas), GPTQ-lite objective, stats collection, calibrate() end-to-end
+(quality win, checkpoint round-trip, continuous-engine parity), stacked /
+expert quantize_model, and eager QuantConfig validation."""
+
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import calib
+from repro.calib.codebook import Codebook, uniform_values
+from repro.core import linear, lut, packing, scales
+from repro.core.linear import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.kernels import ops
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.quant import quantize_model
+from repro.runtime import serve as SV
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_codebook(rng):
+    return jnp.asarray(
+        np.concatenate([[0.0], np.sort(rng.standard_normal(15) * 5)]),
+        jnp.float32)
+
+
+# ------------------------------------------------------------- codebook
+def test_uniform_codebook_is_degenerate_case():
+    """quantize_codebook on the uniform table == quantize_int4, bit-exact."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((9, 24)), jnp.float32)
+    qa = scales.quantize_int4(w, 12)
+    qb = scales.quantize_codebook(w, uniform_values(), 12)
+    assert np.array_equal(np.asarray(qa.codes), np.asarray(qb.codes))
+    np.testing.assert_array_equal(np.asarray(scales.dequantize(qa)),
+                                  np.asarray(scales.dequantize(qb)))
+
+
+def test_codebook_encode_decode_roundtrip():
+    """Values already in the codebook encode/decode exactly."""
+    rng = np.random.default_rng(1)
+    cb = Codebook(values=np.asarray(rand_codebook(rng))).check()
+    codes = jnp.asarray(rng.integers(0, 16, size=(7, 13)), jnp.uint8)
+    vals = cb.decode(codes)
+    assert np.array_equal(np.asarray(cb.encode(vals)), np.asarray(codes))
+
+
+def test_codebook_pack_unpack_roundtrip():
+    """Codebook codes ride the same 4-bit packings as uniform int4."""
+    rng = np.random.default_rng(2)
+    cb = Codebook(values=np.asarray(rand_codebook(rng)))
+    w = jnp.asarray(rng.standard_normal((5, 23)), jnp.float32)
+    qt = scales.quantize_codebook(w, cb.values, 12)
+    for d in (2, 3):
+        idx = packing.pack_indices(qt.codes, d)
+        assert np.array_equal(np.asarray(packing.unpack_indices(idx, d, 23)),
+                              np.asarray(qt.codes))
+    u8 = packing.pack_storage(qt.codes)
+    assert np.array_equal(np.asarray(packing.unpack_storage(u8, 23)),
+                          np.asarray(qt.codes))
+
+
+def test_from_centroids_pins_zero():
+    cb = Codebook.from_centroids([1.5, -2.0, 3.0]).check()
+    assert cb.values[0] == 0.0
+    with pytest.raises(ValueError):
+        Codebook(values=np.ones(16, np.float32)).check()  # no zero at code 0
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_codebook_msgemm_matches_dense(d):
+    """Learned-codebook msGeMM == dequantize->dense, jnp and Pallas paths."""
+    rng = np.random.default_rng(d)
+    cb = rand_codebook(rng)
+    w = jnp.asarray(rng.standard_normal((8, 24)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((24, 3)), jnp.float32)
+    qt = scales.quantize_codebook(w, cb, 12)
+    want = scales.dequantize(qt) @ x
+    got = lut.msgemm(qt.codes, x, d=d, scales=qt.scales, scale_block=12,
+                     codebook=cb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got_pl = ops.msgemm(qt.codes, x, d, scales=qt.scales, scale_block=12,
+                        codebook=cb)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["int4_dequant", "msgemm"])
+@pytest.mark.parametrize("storage", ["packed_idx", "packed_u8"])
+def test_codebook_linear_layer(mode, storage):
+    rng = np.random.default_rng(7)
+    cb = rand_codebook(rng)
+    w = jnp.asarray(rng.standard_normal((10, 24)), jnp.float32)
+    cfg = QuantConfig(mode=mode, d=3, scale_block=12, storage=storage,
+                      codebook="learned")
+    p = linear.from_dense(w, cfg, codebook=cb)
+    assert "codebook" in p
+    x = jnp.asarray(rng.standard_normal((4, 24)), jnp.float32)
+    got = linear.apply(p, x, cfg, in_dim=24)
+    want = x @ scales.dequantize(scales.quantize_codebook(w, cb, 12)).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- fitting
+def test_fit_codebook_never_worse_than_uniform():
+    """Lloyd from the uniform grid init is monotone in weighted MSE."""
+    rng = np.random.default_rng(3)
+    z = rng.standard_normal(4096) * 3
+    wts = 1 + rng.random(4096)
+    cbv = calib.fit_codebook(z, wts, iters=20)
+    assert cbv[0] == 0.0
+
+    def werr(vals):
+        deq = vals[np.argmin(np.abs(z[:, None] - vals[None, :]), axis=1)]
+        return np.sum(wts * (z - deq) ** 2)
+
+    assert werr(cbv.astype(np.float64)) <= werr(
+        uniform_values().astype(np.float64))
+
+
+def test_gptq_reduces_output_mse():
+    rng = np.random.default_rng(4)
+    m, k, blk = 12, 32, 16
+    w = rng.standard_normal((m, k))
+    X = rng.standard_normal((256, k)) * (1 + 2 * rng.random(k))
+    H = X.T @ X / X.shape[0]
+    vals = uniform_values()
+    s, wb, _ = calib.fit_block_scales(w, vals, blk)
+    z = wb / s[..., None]
+    codes_n = np.argmin(np.abs(z[..., None] - vals), axis=-1)
+    codes_n = codes_n.reshape(m, -1)[:, :k]
+    codes_g = calib.gptq_codes(w, H, vals, s, blk)
+    sfull = np.repeat(s, blk, 1)[:, :k]
+
+    def out_mse(codes):
+        E = w - vals[codes] * sfull
+        return np.mean(np.einsum("ik,kl,il->i", E, H, E))
+
+    assert out_mse(codes_g) < out_mse(codes_n)
+
+
+# ------------------------------------------------------------- stats
+def test_stats_collector_tags_and_moments():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=97, max_seq_len=64)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    stream = SyntheticStream(DataConfig(vocab_size=97, seq_len=16,
+                                        global_batch=2))
+    col = calib.collect(params, cfg,
+                        [{k: jnp.asarray(v) for k, v in
+                          stream.host_batch(0).items()}])
+    for tag, k in (("wq", 32), ("up", 32), ("down", 64), ("lm_head", 32)):
+        st = col.get(tag, k)
+        assert st.count > 0, tag
+        m2 = st.second_moment
+        assert m2.shape == (k,) and np.all(m2 > 0)
+    # observer uninstalled after collect: serving records nothing new
+    n = col.get("wq", 32).count
+    T.forward(params, cfg, {"tokens": jnp.zeros((1, 4), jnp.int32)})
+    assert col.get("wq", 32).count == n
+
+
+# ------------------------------------------------------------- calibrate
+CFG = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=211, max_seq_len=128)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    stream = SyntheticStream(DataConfig(vocab_size=211, seq_len=32,
+                                        global_batch=4))
+    return params, stream
+
+
+@pytest.fixture(scope="module")
+def calibrated(dense_model):
+    params, stream = dense_model
+    return calib.calibrate(
+        params, CFG, stream, calib.Recipe(calib_steps=2, kmeans_iters=10),
+        quant=QuantConfig(mode="msgemm", d=3, scale_block=36))
+
+
+def test_calibrate_beats_uniform_weighted_error(calibrated):
+    agg = calibrated.report["aggregate"]
+    assert agg["learned_weighted_err"] < agg["uniform_weighted_err"]
+    for path, entry in calibrated.report.items():
+        if path == "aggregate":
+            continue
+        assert (entry["learned_weighted_err"]
+                <= entry["uniform_weighted_err"] + 1e-12), path
+
+
+def test_calibrated_serves_and_checkpoints(calibrated):
+    """Quantize -> save -> restore into a fresh init -> identical tokens
+    (codebooks persist alongside the packed codes)."""
+    from repro.checkpoint import CheckpointManager
+
+    qcfg = CFG.replace(quant=calibrated.quant)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, 211, (2, 12)), jnp.int32)}
+    toks = SV.generate(calibrated.params, qcfg, batch, max_new_tokens=6)
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td)
+        mgr.save(0, calibrated.params)
+        target = T.init_params(jax.random.PRNGKey(9), qcfg)
+        restored = mgr.restore(0, target)
+    toks2 = SV.generate(restored, qcfg, batch, max_new_tokens=6)
+    assert np.array_equal(np.asarray(toks), np.asarray(toks2))
+
+
+def test_calibrated_continuous_engine_parity(calibrated):
+    """Codebook-quantized models serve token-identical through the paged
+    continuous-batching engine."""
+    from repro.serving import Engine, Request
+
+    qcfg = CFG.replace(quant=calibrated.quant)
+    prompt = tuple(int(t) for t in
+                   np.random.default_rng(1).integers(0, 211, 7))
+    eng = Engine(calibrated.params, qcfg, max_slots=2, block_size=4,
+                 prefill_chunk=4, max_model_len=64)
+    res = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=6)])
+    ref = SV.generate(calibrated.params, qcfg,
+                      {"tokens": np.array([prompt], np.int32)},
+                      max_new_tokens=6)
+    assert res[0].generated == [int(t) for t in np.asarray(ref)[0]]
+
+
+def test_calibrate_quality_harness(dense_model, calibrated):
+    params, stream = dense_model
+    qcfg = CFG.replace(quant=calibrated.quant)
+    rep = calib.quality.compare(
+        params, CFG,
+        {"uniform": (quantize_model(params, CFG, calibrated.quant), qcfg),
+         "learned": (calibrated.params, qcfg)},
+        stream, steps=1)
+    assert rep["bf16"]["logit_mse"] == 0.0
+    assert rep["learned"]["logit_mse"] < rep["uniform"]["logit_mse"]
+
+
+# -------------------------------------------------- stacked / expert trees
+MOE_CFG = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=97, max_seq_len=64,
+                      block_pattern=("moe",), num_experts=4,
+                      num_experts_per_tok=2, moe_d_ff=48)
+
+
+def test_quantize_model_stacked_and_expert_weights():
+    """Scan-grouped (G, ...) and expert (G, E, ...) stacked weights
+    quantize with per-slice codebooks and still forward."""
+    params = T.init_params(jax.random.PRNGKey(2), MOE_CFG)
+    qc = QuantConfig(mode="msgemm", d=3, scale_block=36, codebook="learned")
+    qp = quantize_model(params, MOE_CFG, qc)
+    expert_up = qp["blocks"]["0:moe"]["moe"]["experts"]["up"]
+    assert expert_up["codebook"].shape == (2, 4, 16)  # (groups, experts, 16)
+    assert expert_up["idx"].shape[:2] == (2, 4)
+    wq = qp["blocks"]["0:moe"]["attn"]["wq"]
+    assert wq["codebook"].shape == (2, 16)  # scan-grouped
+    logits, _ = T.forward(qp, MOE_CFG.replace(quant=qc),
+                          {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert logits.shape == (1, 8, 97)
+
+
+def test_calibrate_moe_per_layer_codebooks():
+    params = T.init_params(jax.random.PRNGKey(3), MOE_CFG)
+    stream = SyntheticStream(DataConfig(vocab_size=97, seq_len=16,
+                                        global_batch=2))
+    res = calib.calibrate(params, MOE_CFG, stream,
+                          calib.Recipe(calib_steps=1, kmeans_iters=6),
+                          quant=QuantConfig(mode="msgemm", d=3,
+                                            scale_block=36))
+    cb = res.codebooks["blocks/0:moe/moe/experts/up"]
+    assert cb.shape == (2, 4, 16)
+    # re-applying the fitted tables through quantize_model reproduces them
+    qp = quantize_model(params, MOE_CFG, res.quant, codebooks=res.codebooks)
+    np.testing.assert_allclose(
+        np.asarray(qp["blocks"]["0:moe"]["moe"]["experts"]["up"]["codebook"]),
+        cb, rtol=1e-6)
+    agg = res.report["aggregate"]
+    assert agg["learned_weighted_err"] < agg["uniform_weighted_err"]
+
+
+# ------------------------------------------------------------- validation
+def test_quantconfig_eager_validation():
+    """Config/scale-block incompatibilities surface at construction, not
+    deep inside the kernels (core.scales.check_applicable)."""
+    with pytest.raises(ValueError):
+        QuantConfig(mode="msgemm", d=3, scale_block=10)  # 3 does not divide 10
+    with pytest.raises(ValueError):
+        QuantConfig(mode="msgemm", d=3, scale_block=2)  # block < d
+    with pytest.raises(ValueError):
+        QuantConfig(mode="msgemm", d="adaptive", scale_block=9)  # odd block
+    with pytest.raises(ValueError):
+        QuantConfig(mode="msgemm", d=5)  # 16^5 LUT
+    with pytest.raises(ValueError):
+        QuantConfig(mode="msgemm", d=0)
+    with pytest.raises(ValueError):
+        QuantConfig(storage="zip")
+    with pytest.raises(ValueError):
+        QuantConfig(impl="cuda")
+    with pytest.raises(ValueError):
+        QuantConfig(codebook="maybe")
+    with pytest.raises(ValueError):
+        QuantConfig(consume_chunk=0)
+    # valid corners still construct
+    QuantConfig(mode="msgemm", d="adaptive")
+    QuantConfig(mode="msgemm", d=2, scale_block=16, codebook="learned")
