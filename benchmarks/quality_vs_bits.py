@@ -21,7 +21,7 @@ from pathlib import Path
 import jax
 
 from repro import calib
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec
 from repro.data import DataConfig, SyntheticStream
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, schedules
@@ -60,7 +60,7 @@ def run(steps: int) -> dict:
     results = {"config": {"model": CFG.name, "train_steps": steps},
                "sweep": []}
     for d, scale_block in SWEEP:
-        quant = QuantConfig(mode="msgemm", d=d, scale_block=scale_block)
+        quant = QuantSpec(mode="msgemm", d=d, scale_block=scale_block)
         res = calib.calibrate(params, CFG, data,
                               calib.Recipe(calib_steps=2, kmeans_iters=15),
                               quant=quant)

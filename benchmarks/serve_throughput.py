@@ -9,6 +9,12 @@ phase_rates/roofline.
 The continuous-engine rows are also written machine-readable to
 ``benchmarks/results/BENCH_serve.json`` (tok/s, p50/p95 latency and TTFT
 per arrival rate) so the serving perf trajectory is tracked across PRs.
+
+Run standalone with ``--autotune`` to exercise the dispatch autotuner
+end-to-end: the engine resolves and persists shape-keyed ExecPlans to
+``benchmarks/results/autotune_cache.json`` at build, and a second engine
+build asserts every plan is served from the reloaded cache (no
+re-timing).
 """
 
 from __future__ import annotations
@@ -19,7 +25,8 @@ from pathlib import Path
 
 import jax
 
-from repro.core.linear import QuantConfig
+from repro import dispatch
+from repro.core.spec import QuantSpec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.quant import quantize_model
@@ -27,6 +34,7 @@ from repro.quant.quantize import quantized_size_bytes
 from repro.runtime import serve as SV
 
 RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_serve.json"
+AUTOTUNE_CACHE = Path(__file__).parent / "results" / "autotune_cache.json"
 
 CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
                   d_ff=1024, vocab_size=8192, max_seq_len=512)
@@ -55,7 +63,7 @@ def run() -> list[str]:
         if mode == "bf16":
             p, c = params, CFG
         else:
-            qc = QuantConfig(mode=mode, d=d)
+            qc = QuantSpec(mode=mode, d=d)
             p = quantize_model(params, CFG, qc)
             c = CFG.replace(quant=qc)
         for bsz in (1, 8):
@@ -89,7 +97,7 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
         if mode == "bf16":
             p, c = params, CFG
         else:
-            qc = QuantConfig(mode=mode, d=3)
+            qc = QuantSpec(mode=mode, d=3)
             p, c = quantize_model(params, CFG, qc), CFG.replace(quant=qc)
         for rate in rates if mode == "bf16" else rates[:1]:
             eng = Engine(p, c, max_slots=4, block_size=8, prefill_chunk=16,
@@ -119,3 +127,71 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
          "runs": runs}, indent=2))
     lines.append(f"serve_throughput/continuous/json,0.0,{RESULTS_JSON}")
     return lines
+
+
+def run_autotune(cache_path=None) -> list[str]:
+    """--autotune: drive the continuous engine with build-time plan
+    autotuning, writing the persistent cache, then rebuild and assert the
+    cache is reused (zero candidates re-timed)."""
+    from repro.dispatch import autotune as at
+    from repro.serving import Engine, poisson_stream
+
+    cache_path = Path(cache_path or AUTOTUNE_CACHE)
+    cache_path.parent.mkdir(parents=True, exist_ok=True)
+    if cache_path.exists():
+        cache_path.unlink()  # measure a cold write -> warm reload cycle
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, CFG)
+    spec = QuantSpec(mode="msgemm", d=3)
+    p, c = quantize_model(params, CFG, spec), CFG.replace(quant=spec)
+
+    def build_and_run():
+        eng = Engine(p, c, max_slots=4, block_size=8, prefill_chunk=16,
+                     max_model_len=48, autotune=True,
+                     autotune_cache=cache_path)
+        res = eng.run(poisson_stream(4, c.vocab_size, max_new_tokens=4,
+                                     seed=7))
+        toks = {rid: seq.generated for rid, seq in res.items()}
+        return eng, toks
+
+    at.num_timed_candidates = 0
+    eng1, toks1 = build_and_run()
+    timed = at.num_timed_candidates
+    n_plans = len(eng1.exec_plans)
+    assert cache_path.exists() and n_plans, "autotune wrote no plans"
+
+    at.num_timed_candidates = 0
+    dispatch.set_cache_path(cache_path)  # fresh in-memory view of the file
+    eng2, toks2 = build_and_run()
+    assert at.num_timed_candidates == 0, \
+        f"warm rebuild re-timed {at.num_timed_candidates} candidates"
+    assert toks1 == toks2, "autotuned plans changed generated tokens"
+
+    lines = ["name,us_per_call,derived",
+             f"serve_throughput/autotune/cold,0.0,"
+             f"plans={n_plans} candidates_timed={timed}",
+             f"serve_throughput/autotune/warm,0.0,"
+             f"plans={len(eng2.exec_plans)} candidates_timed=0 "
+             f"tokens_identical=True",
+             f"serve_throughput/autotune/json,0.0,{cache_path}"]
+    return lines
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune", action="store_true",
+                    help="exercise build-time plan autotuning + the "
+                         "persistent cache write->reload cycle")
+    ap.add_argument("--cache", default=None,
+                    help=f"plan-cache path (default {AUTOTUNE_CACHE})")
+    args = ap.parse_args(argv)
+    lines = run_autotune(args.cache) if args.autotune else run()
+    print("\n".join(lines))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

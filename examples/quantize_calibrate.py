@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro import calib
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec
 from repro.data import DataConfig, SyntheticStream
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -54,7 +54,7 @@ recipe = {
     "kmeans+gptq": calib.Recipe(rounding="gptq"),
     "model": calib.Recipe(scope="model"),
 }[args.recipe]
-quant = QuantConfig(mode="msgemm", d=3, scale_block=36)
+quant = QuantSpec(mode="msgemm", d=3, scale_block=36)
 result = calib.calibrate(params, cfg, data, recipe, quant=quant)
 agg = result.report["aggregate"]
 print(f"\ncalibrated {agg['num_linears']} linears with recipe "

@@ -8,7 +8,7 @@ generated, and per-request latency metrics come out at the end.
 import jax
 import numpy as np
 
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.quant import quantize_model
@@ -20,7 +20,7 @@ cfg = ModelConfig(name="serve-demo", num_layers=4, d_model=256, num_heads=8,
 params = T.init_params(jax.random.PRNGKey(0), cfg)
 
 # serve the paper's int4 weights (msGeMM execution mode)
-qc = QuantConfig(mode="msgemm", d=3, scale_block=36)
+qc = QuantSpec(mode="msgemm", d=3, scale_block=36)
 params = quantize_model(params, cfg, qc)
 cfg = cfg.replace(quant=qc)
 

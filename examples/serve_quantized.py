@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.quant import quantize_model
@@ -28,7 +28,7 @@ for mode in ("bf16", "int4_dequant", "msgemm"):
     if mode == "bf16":
         p, c = params, cfg
     else:
-        qc = QuantConfig(mode=mode, d=3, scale_block=36)
+        qc = QuantSpec(mode=mode, d=3, scale_block=36)
         p = quantize_model(params, cfg, qc)
         c = cfg.replace(quant=qc)
     t0 = time.time()

@@ -81,7 +81,7 @@ class Recipe:
 @dataclass
 class CalibResult:
     params: dict                  # servable quantized param tree
-    quant: Any                    # the QuantConfig the tree was built for
+    quant: Any                    # the QuantSpec the tree was built for
     codebooks: dict               # path str -> (..., 16) value table
     report: dict                  # per-layer + aggregate weighted errors
     collector: Any                # the StatsCollector (for inspection)
@@ -151,7 +151,10 @@ def fit_block_scales(w, values, block: int, col_weights=None, *,
     vals = np.asarray(values, np.float64)
     best_err = np.full((m, nb), np.inf)
     best_s = base.copy()
-    for f in np.linspace(lo, 1.0, candidates):
+    # the base (unshrunk) scale is always a candidate — otherwise
+    # candidates=1 degenerates to np.linspace(lo, 1, 1) == [lo] and the
+    # search shrinks unconditionally even when that increases error
+    for f in np.unique(np.append(np.linspace(lo, 1.0, candidates), 1.0)):
         s = base * f
         z = wb / s[..., None]
         deq = vals[np.argmin(np.abs(z[..., None] - vals), axis=-1)]
@@ -261,7 +264,7 @@ def calibrate(params, cfg, data, recipe: Recipe = Recipe(), *,
 
     params/cfg: a *dense* (bf16/f32) model; data: a SyntheticStream (or a
     list of batch dicts) to draw ``recipe.calib_steps`` calibration
-    batches from; quant: the target QuantConfig (defaults to msgemm with
+    batches from; quant: the target QuantSpec (defaults to msgemm with
     learned codebooks; ``codebook='learned'`` is forced so the emitted
     tree carries its tables).
 
@@ -273,7 +276,7 @@ def calibrate(params, cfg, data, recipe: Recipe = Recipe(), *,
 
     if quant is None:
         quant = (cfg.quant if cfg.quant.mode != "bf16"
-                 else qlinear.QuantConfig(mode="msgemm"))
+                 else qlinear.QuantSpec(mode="msgemm"))
     if quant.codebook != "learned":
         quant = dataclasses.replace(quant, codebook="learned")
 

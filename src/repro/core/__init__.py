@@ -5,11 +5,14 @@ Public API:
     lut         produce / consume / msgemm (lowerable jnp formulation)
     scales      row-block shared-scale quantization (§3.3)
     complexity  Eqs. 7-15 analytic model + instrumented op counting
+    spec        QuantSpec — frozen weight-representation description
     linear      QuantizedLinear — the framework integration point
+                (execution is planned by repro.dispatch)
 """
 
-from repro.core import complexity, linear, lut, packing, scales  # noqa: F401
+from repro.core import complexity, linear, lut, packing, scales, spec  # noqa: F401
 from repro.core.linear import DENSE, QuantConfig  # noqa: F401
+from repro.core.spec import QuantSpec, as_spec  # noqa: F401
 from repro.core.lut import msgemm, msgemm_reference, produce, consume  # noqa: F401
 from repro.core.scales import (  # noqa: F401
     quantize_int4, quantize_codebook, dequantize, QuantizedTensor,

@@ -2,15 +2,19 @@
 
 Every weight-bearing linear in every architecture (attention projections,
 MLPs, MoE expert FFNs, mamba/xLSTM projections, lm_head) routes through this
-module.  Execution modes:
+module.  The weight *representation* is described by a frozen
+:class:`repro.core.spec.QuantSpec`:
 
 * ``bf16``         dense matmul (training + dense-serve baseline; the
                    paper's "naive GeMM", Eq. 14)
 * ``int4_dequant`` practical current-TPU int4 path: dequantize -> MXU matmul
 * ``msgemm``       the paper's algorithm (produce LUT on MXU, consume via
-                   gather-add), in the lowerable jnp formulation; ``impl=
-                   'pallas'`` selects the fused VMEM-tiled kernel for
-                   small-scale validation (kernels/msgemm.py)
+                   gather-add)
+
+*How* a linear runs — which registered backend, which VMEM tiles, which
+consume chunking — is a separate, per-shape decision made by
+``repro.dispatch`` (backend registry + ExecPlan + persistent autotuner).
+``apply`` below is a thin wrapper over ``dispatch.execute``.
 
 Weight-storage layouts for quantized modes (a §Perf lever — see
 EXPERIMENTS.md):
@@ -25,95 +29,85 @@ EXPERIMENTS.md):
 Activation convention is row-major ``x (..., k) -> y (..., m)`` with the
 weight stored as the paper's ``M (m, k)``; internally we transpose to the
 paper's column layout.
+
+``QuantConfig`` remains as a **deprecated shim** that splits itself into
+``.spec`` (QuantSpec) + ``.policy`` (dispatch.ExecPolicy); every
+pre-registry call site keeps working unchanged.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import lut, packing, scales
+from repro.core import packing, scales
+from repro.core.spec import DENSE, QuantSpec, as_spec  # noqa: F401 (re-export)
 
-
-_MODES = ("bf16", "int4_dequant", "msgemm")
-_STORAGES = ("packed_idx", "packed_u8")
 _IMPLS = ("jnp", "pallas")
-_CODEBOOKS = ("none", "learned")
+# impl -> forced backend name for mode='msgemm' (the shim's hardcoded
+# choice IS what the old if/elif dispatch did)
+_IMPL_BACKENDS = {"jnp": "msgemm_jnp", "pallas": "msgemm_pallas"}
 
 
 @dataclass(frozen=True)
 class QuantConfig:
+    """Deprecated: use :class:`repro.core.spec.QuantSpec` for the weight
+    representation and ``repro.dispatch.ExecPolicy``/``ExecPlan`` for
+    execution choices.  Kept as a shim: ``.spec``/``.policy`` split it
+    into the two new halves, and every function here accepts either."""
+
     mode: str = "bf16"  # bf16 | int4_dequant | msgemm
-    # LUT depth: an int, or 'adaptive' — pick d* = argmax Eq. 15 per
-    # linear from its static (out, in) dims (beyond-paper: small-m
-    # projections get d=2 where 16^d amortizes, big-m heads keep d=3/4;
-    # EXPERIMENTS.md §Perf C5).  Deterministic in the shapes, so init and
-    # apply always agree.
     d: int | str = 3
     scale_block: int = 0  # 0 -> 12*d (multiple of every d in 2..4, §3.3)
     storage: str = "packed_idx"  # packed_idx | packed_u8
     impl: str = "jnp"  # jnp | pallas
     consume_chunk: int = 1  # j-chunks per consume scan step
-    # Pallas execution mode for impl='pallas': None auto-detects the
-    # backend (compiled on TPU, interpreter elsewhere); set explicitly to
-    # force either mode (e.g. interpret=True to debug on TPU).
-    interpret: bool | None = None
-    # 'learned' gives every quantized linear a 16-entry value codebook
-    # leaf (repro.calib fits them; init seeds the uniform int4 table so
-    # checkpoint trees always match).  'none' is the plain int4 grid.
+    interpret: bool | None = None  # Pallas mode; None auto-detects
     codebook: str = "none"  # none | learned
 
     def __post_init__(self):
-        # Eager validation: every config invariant the quantized paths
-        # rely on is checked here, at construction, instead of surfacing
-        # as a shape error deep inside consume()/the Pallas kernel.
-        if self.mode not in _MODES:
-            raise ValueError(f"unknown quant mode {self.mode!r}; one of {_MODES}")
-        if self.storage not in _STORAGES:
-            raise ValueError(
-                f"unknown storage {self.storage!r}; one of {_STORAGES}")
+        warnings.warn(
+            "QuantConfig is deprecated: describe the weights with "
+            "core.spec.QuantSpec and execution with repro.dispatch "
+            "(ExecPolicy / ExecPlan); QuantConfig.spec / .policy perform "
+            "the split", DeprecationWarning, stacklevel=3)
         if self.impl not in _IMPLS:
             raise ValueError(f"unknown impl {self.impl!r}; one of {_IMPLS}")
-        if self.codebook not in _CODEBOOKS:
-            raise ValueError(
-                f"unknown codebook policy {self.codebook!r}; one of {_CODEBOOKS}")
-        if self.d != "adaptive":
-            if not isinstance(self.d, int) or not 1 <= self.d <= 4:
-                raise ValueError(
-                    f"LUT depth d={self.d!r} must be 'adaptive' or an int in "
-                    "[1, 4] (the 16^d LUT is produced in full)")
         if self.consume_chunk < 1:
             raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
-        if self.scale_block < 0:
-            raise ValueError(f"scale_block={self.scale_block} must be >= 0")
-        if self.d != "adaptive" and self.scale_block == 0:
-            object.__setattr__(self, "scale_block", 12 * int(self.d))
-        elif self.scale_block == 0:
-            object.__setattr__(self, "scale_block", 12)
-        if self.mode == "msgemm":
-            # §3.3 applicability — for adaptive d the block must compose
-            # with the smallest candidate depth (resolve_d only shrinks d
-            # until it divides the block, so d=2 is the floor).
-            scales.check_applicable(
-                self.scale_block, 2 if self.d == "adaptive" else int(self.d))
+        # representation invariants live in QuantSpec; constructing the
+        # spec validates mode/d/storage/codebook/scale_block eagerly and
+        # resolves the scale_block=0 default
+        spec = QuantSpec(mode=self.mode, d=self.d,
+                         scale_block=self.scale_block,
+                         storage=self.storage, codebook=self.codebook)
+        object.__setattr__(self, "scale_block", spec.scale_block)
+
+    @property
+    def spec(self) -> QuantSpec:
+        """The weight-representation half."""
+        return QuantSpec(mode=self.mode, d=self.d,
+                         scale_block=self.scale_block,
+                         storage=self.storage, codebook=self.codebook)
+
+    @property
+    def policy(self):
+        """The execution half (a dispatch.ExecPolicy).  ``impl`` maps to
+        a forced backend for msgemm — exactly the old hardcoded branch —
+        and auto-selection handles the other modes."""
+        from repro.dispatch import ExecPolicy
+
+        backend = _IMPL_BACKENDS[self.impl] if self.mode == "msgemm" else None
+        return ExecPolicy(backend=backend, interpret=self.interpret,
+                          consume_chunk=self.consume_chunk)
 
     def resolve_d(self, in_dim: int, out_dim: int) -> int:
-        """The depth this linear actually uses (static in the shapes)."""
-        if self.d != "adaptive":
-            return int(self.d)
-        from repro.core import complexity
+        return self.spec.resolve_d(in_dim, out_dim)
 
-        d_star, _ = complexity.best_d(out_dim, in_dim, range(2, 5))
-        # the shared scale block must stay a multiple of d (§3.3)
-        while self.scale_block % d_star:
-            d_star -= 1
-        return max(d_star, 2)
-
-
-DENSE = QuantConfig(mode="bf16")
 
 # Optional activation-statistics observer (repro.calib.stats installs one
 # during calibration via set_observer; None costs nothing).  Kept here so
@@ -130,7 +124,7 @@ def set_observer(obs) -> None:
     _OBSERVER = obs
 
 
-def init(key, in_dim: int, out_dim: int, cfg: QuantConfig = DENSE, *,
+def init(key, in_dim: int, out_dim: int, cfg=DENSE, *,
          dtype=jnp.float32, init_scale: float | None = None) -> dict:
     """Initialise params.  Quantized modes initialise by quantizing a random
     dense weight (real deployments call quant.quantize_model on a trained
@@ -140,34 +134,37 @@ def init(key, in_dim: int, out_dim: int, cfg: QuantConfig = DENSE, *,
     return from_dense(w, cfg, dtype=dtype)
 
 
-def from_dense(w: jnp.ndarray, cfg: QuantConfig = DENSE, *,
+def from_dense(w: jnp.ndarray, cfg=DENSE, *,
                dtype=jnp.float32, codebook=None) -> dict:
     """Build this layer's params from a dense (out, in) weight matrix.
 
-    ``codebook``: optional (16,) value table.  With cfg.codebook='learned'
-    and no explicit table, the uniform int4 values are stored as a
-    placeholder so param-tree structure is calibration-independent
-    (checkpoint restore targets always match).
+    ``cfg``: a QuantSpec (or deprecated QuantConfig).  ``codebook``:
+    optional (16,) value table.  With cfg.codebook='learned' and no
+    explicit table, the uniform int4 values are stored as a placeholder
+    so param-tree structure is calibration-independent (checkpoint
+    restore targets always match).
     """
-    if cfg.mode == "bf16":
+    spec = as_spec(cfg)
+    if spec.mode == "bf16":
         return {"w": w.astype(dtype)}
-    if codebook is None and cfg.codebook == "learned":
+    if codebook is None and spec.codebook == "learned":
         codebook = packing.b_values(jnp.float32)
     if codebook is not None:
-        qt = scales.quantize_codebook(w, codebook, cfg.scale_block)
+        qt = scales.quantize_codebook(w, codebook, spec.scale_block)
     else:
-        qt = scales.quantize_int4(w, cfg.scale_block)
-    return from_quantized(qt, cfg)
+        qt = scales.quantize_int4(w, spec.scale_block)
+    return from_quantized(qt, spec)
 
 
-def from_quantized(qt: scales.QuantizedTensor, cfg: QuantConfig) -> dict:
+def from_quantized(qt: scales.QuantizedTensor, cfg) -> dict:
     """Param dict from an already-quantized tensor (calib's GPTQ path
     produces codes directly; from_dense routes through here too)."""
+    spec = as_spec(cfg)
     out_dim, in_dim = qt.shape
     p: dict[str, Any] = {"scales": qt.scales.astype(jnp.float32)}
-    if cfg.storage == "packed_idx":
+    if spec.storage == "packed_idx":
         p["idx"] = packing.pack_indices(qt.codes,
-                                        cfg.resolve_d(in_dim, out_dim))
+                                        spec.resolve_d(in_dim, out_dim))
     else:
         p["u8"] = packing.pack_storage(qt.codes)
     if qt.codebook is not None:
@@ -175,73 +172,52 @@ def from_quantized(qt: scales.QuantizedTensor, cfg: QuantConfig) -> dict:
     return p
 
 
-def apply(params: dict, x: jnp.ndarray, cfg: QuantConfig = DENSE, *,
+def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
           in_dim: int | None = None, precision=None,
-          tag: str | None = None) -> jnp.ndarray:
-    """x (..., in) -> y (..., out).
+          tag: str | None = None, plan=None, policy=None) -> jnp.ndarray:
+    """x (..., in) -> y (..., out), through the dispatch registry.
 
-    ``tag`` names this linear for the activation-statistics observer
-    (calibration); it does not affect the computation.
+    ``cfg`` is a QuantSpec (or deprecated QuantConfig, whose embedded
+    policy is honoured).  ``plan``: an explicit dispatch.ExecPlan
+    bypassing planning; ``policy``: a dispatch.ExecPolicy overriding both
+    the shim's and the process default.  ``tag`` names this linear for
+    the activation-statistics observer (calibration); it does not affect
+    the computation.
     """
     if _OBSERVER is not None and tag is not None:
         _OBSERVER.record(tag, x)
-    if cfg.mode == "bf16":
-        w = params["w"]
-        return jax.lax.dot_general(
-            x, w, (((x.ndim - 1,), (1,)), ((), ())),
-            preferred_element_type=x.dtype, precision=precision)
+    from repro import dispatch
 
-    k = in_dim if in_dim is not None else _infer_k(params, cfg)
-    m = params["scales"].shape[0]
-    d = cfg.resolve_d(k, m)
-    codebook = params.get("codebook")
-    if cfg.mode == "int4_dequant":
-        codes = _codes(params, cfg, k, d)
-        qt = scales.QuantizedTensor(
-            codes=codes, scales=params["scales"], block=cfg.scale_block,
-            shape=(codes.shape[0], k), codebook=codebook)
-        w = scales.dequantize(qt, x.dtype)
-        return jax.lax.dot_general(
-            x, w, (((x.ndim - 1,), (1,)), ((), ())),
-            preferred_element_type=x.dtype)
-
-    # ---- msgemm ----
-    if cfg.impl == "pallas":
-        from repro.kernels import ops as kops
-
-        codes = _codes(params, cfg, k, d)
-        batch = x.shape[:-1]
-        y = kops.msgemm(
-            codes, x.reshape(-1, k).T, d,
-            scales=params["scales"], scale_block=cfg.scale_block,
-            codebook=codebook, interpret=cfg.interpret)
-        return y.T.reshape(*batch, -1).astype(x.dtype)
-
-    batch = x.shape[:-1]
-    xt = x.reshape(-1, k).T  # (k, B) — the paper's column layout
-    lut_t = lut.produce(xt, d, dtype=jnp.float32, codebook=codebook)
-    idx = params["idx"] if cfg.storage == "packed_idx" else (
-        packing.indices_from_storage(params["u8"], d, k))
-    y = lut.consume(
-        lut_t, idx, scales=params["scales"], scale_block=cfg.scale_block,
-        d=d, chunk=cfg.consume_chunk)
-    return y.T.reshape(*batch, -1).astype(x.dtype)
+    return dispatch.execute(params, x, cfg, in_dim=in_dim,
+                            precision=precision, plan_override=plan,
+                            policy=policy)
 
 
-def _infer_k(params: dict, cfg: QuantConfig) -> int:
-    if cfg.storage == "packed_u8":
+def _infer_k(params: dict, cfg) -> int:
+    spec = as_spec(cfg)
+    if spec.mode == "bf16":
+        return params["w"].shape[-1]
+    if spec.storage == "packed_u8":
         return params["u8"].shape[-1] * 2
-    if cfg.d != "adaptive":
-        return params["idx"].shape[-1] * int(cfg.d)
-    raise ValueError("adaptive-d msgemm needs an explicit in_dim")
+    if spec.d != "adaptive":
+        return params["idx"].shape[-1] * int(spec.d)
+    raise ValueError(
+        "cannot infer the input dim of an adaptive-d 'packed_idx' linear "
+        f"from its params (keys={sorted(params)}): 'idx' has ceil(k/d) "
+        "columns but d itself depends on (in_dim, out_dim).  Pass the "
+        "layer's input dim explicitly, e.g. linear.apply(params, x, cfg, "
+        "in_dim=<in_dim>) — model code does this via "
+        "common.linear_apply(..., in_dim=...).")
 
 
-def _codes(params: dict, cfg: QuantConfig, k: int, d: int) -> jnp.ndarray:
-    if cfg.storage == "packed_idx":
+def _codes(params: dict, cfg, k: int, d: int) -> jnp.ndarray:
+    spec = as_spec(cfg)
+    if spec.storage == "packed_idx":
         return packing.unpack_indices(params["idx"], d, k)
     return packing.unpack_storage(params["u8"], k)
 
 
-def serving_config(cfg: QuantConfig, mode: str) -> QuantConfig:
-    """Derive a serving-time quant config from a layer's config."""
+def serving_config(cfg, mode: str):
+    """Derive a serving-time quant spec/config from a layer's config.
+    Preserves the input type: QuantSpec -> QuantSpec, shim -> shim."""
     return replace(cfg, mode=mode)

@@ -1,0 +1,109 @@
+"""QuantSpec — a frozen description of *what the weights are*.
+
+The execution API splits into three layers (the EmuGEMM-style
+front-end/back-end separation the multi-backend roadmap needs):
+
+1. ``QuantSpec`` (this module) — weight **representation** only: quant
+   mode, LUT depth d, §3.3 scale-block size, storage layout, codebook
+   policy.  It says nothing about *how* a GeMM runs.
+2. ``repro.dispatch`` — the backend registry: the dense MXU path, the
+   jnp produce/consume msGeMM, the fused Pallas msGeMM and the
+   int4-dequant kernels register as peers with capability predicates.
+3. ``repro.dispatch.plan(spec, m, k, batch) -> ExecPlan`` — a frozen,
+   hashable *physical* execution choice (backend + tiles + chunking),
+   produced by the shape heuristic or the persistent autotuner.
+
+``core.linear.QuantConfig`` survives as a deprecated shim that splits
+itself into ``.spec`` (a QuantSpec) + ``.policy`` (a dispatch.ExecPolicy)
+so every existing call site keeps working unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core import scales
+
+MODES = ("bf16", "int4_dequant", "msgemm")
+STORAGES = ("packed_idx", "packed_u8")
+CODEBOOKS = ("none", "learned")
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Frozen weight-representation description (no execution choices).
+
+    mode : ``bf16`` dense weights | ``int4_dequant`` | ``msgemm``
+    d : LUT depth — an int in [1, 4], or ``'adaptive'`` to pick the
+        per-linear argmax of Eq. 15 from the static (out, in) dims.
+    scale_block : §3.3 shared-scale row-block size; 0 resolves to 12·d
+        (a multiple of every d in 2..4).
+    storage : ``packed_idx`` (int32 LUT indices, 4·d bits -> 32 bits per
+        chunk) | ``packed_u8`` (true int4, 2 codes/byte).
+    codebook : ``none`` (uniform int4 grid) | ``learned`` (16-entry value
+        table leaf, fitted by repro.calib).
+    """
+
+    mode: str = "bf16"
+    d: int | str = 3
+    scale_block: int = 0
+    storage: str = "packed_idx"
+    codebook: str = "none"
+
+    def __post_init__(self):
+        # Eager validation: every representation invariant the quantized
+        # paths rely on is checked at construction instead of surfacing
+        # as a shape error deep inside consume()/the Pallas kernel.
+        if self.mode not in MODES:
+            raise ValueError(f"unknown quant mode {self.mode!r}; one of {MODES}")
+        if self.storage not in STORAGES:
+            raise ValueError(
+                f"unknown storage {self.storage!r}; one of {STORAGES}")
+        if self.codebook not in CODEBOOKS:
+            raise ValueError(
+                f"unknown codebook policy {self.codebook!r}; one of {CODEBOOKS}")
+        if self.d != "adaptive":
+            if not isinstance(self.d, int) or not 1 <= self.d <= 4:
+                raise ValueError(
+                    f"LUT depth d={self.d!r} must be 'adaptive' or an int in "
+                    "[1, 4] (the 16^d LUT is produced in full)")
+        if self.scale_block < 0:
+            raise ValueError(f"scale_block={self.scale_block} must be >= 0")
+        if self.d != "adaptive" and self.scale_block == 0:
+            object.__setattr__(self, "scale_block", 12 * int(self.d))
+        elif self.scale_block == 0:
+            object.__setattr__(self, "scale_block", 12)
+        if self.mode == "msgemm":
+            # §3.3 applicability — for adaptive d the block must compose
+            # with the smallest candidate depth (resolve_d only shrinks d
+            # until it divides the block, so d=2 is the floor).
+            scales.check_applicable(
+                self.scale_block, 2 if self.d == "adaptive" else int(self.d))
+
+    def resolve_d(self, in_dim: int, out_dim: int) -> int:
+        """The depth this linear actually uses (static in the shapes)."""
+        if self.d != "adaptive":
+            return int(self.d)
+        from repro.core import complexity
+
+        d_star, _ = complexity.best_d(out_dim, in_dim, range(2, 5))
+        # the shared scale block must stay a multiple of d (§3.3)
+        while self.scale_block % d_star:
+            d_star -= 1
+        return max(d_star, 2)
+
+    def with_mode(self, mode: str) -> "QuantSpec":
+        return replace(self, mode=mode)
+
+
+DENSE = QuantSpec(mode="bf16")
+
+
+def as_spec(cfg) -> QuantSpec:
+    """Coerce a QuantSpec or a (deprecated) QuantConfig to a QuantSpec."""
+    if isinstance(cfg, QuantSpec):
+        return cfg
+    spec = getattr(cfg, "spec", None)
+    if isinstance(spec, QuantSpec):
+        return spec
+    raise TypeError(f"expected QuantSpec or QuantConfig, got {type(cfg)!r}")

@@ -1,0 +1,83 @@
+"""repro.dispatch — pluggable GeMM execution behind a stable front-end.
+
+The three-layer split (see core/spec.py):
+
+* ``QuantSpec`` (core.spec) says *what the weights are*;
+* this package's **registry** holds the physical execution paths
+  (dense MXU, jnp produce/consume msGeMM, fused Pallas msGeMM, int4
+  dequant jnp + Pallas) as capability-scoped peers;
+* ``plan()`` maps (spec, m, k, batch, device) to a frozen **ExecPlan**
+  via heuristic or the persistent **autotuner**; ``execute()`` runs one
+  linear through its plan.
+
+``core.linear.apply`` is a thin wrapper over :func:`execute`; every
+model linear in every architecture routes through here.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.spec import QuantSpec, as_spec
+from repro.dispatch.registry import (  # noqa: F401
+    Backend, available_backends, backend_names, device_kind, get_backend,
+    register_backend, select_backend, unregister_backend,
+)
+from repro.dispatch.plan import (  # noqa: F401
+    DEFAULT_POLICY, ExecPlan, ExecPolicy, collecting, get_default_policy,
+    heuristic_plan, plan, plan_d, plan_key, set_default_policy,
+    using_policy,
+)
+from repro.dispatch import backends as _backends  # noqa: F401  (registers)
+# NOTE: the tuner *function* lives at dispatch.autotune.autotune — the
+# bare name is not re-exported so the ``autotune`` submodule stays
+# addressable as dispatch.autotune.
+from repro.dispatch.autotune import (  # noqa: F401
+    PlanCache, cache, default_cache_path, set_cache_path, warm,
+)
+
+
+def split(cfg) -> tuple[QuantSpec, ExecPolicy | None]:
+    """(spec, policy) from a QuantSpec (no policy) or a deprecated
+    QuantConfig shim (which carries one)."""
+    if isinstance(cfg, QuantSpec):
+        return cfg, None
+    spec = getattr(cfg, "spec", None)
+    pol = getattr(cfg, "policy", None)
+    if isinstance(spec, QuantSpec):
+        return spec, pol
+    raise TypeError(f"expected QuantSpec or QuantConfig, got {type(cfg)!r}")
+
+
+def execute(params: dict, x, cfg, *, in_dim: int | None = None,
+            precision=None, plan_override: ExecPlan | None = None,
+            policy: ExecPolicy | None = None):
+    """Run one linear ``x (..., k) -> y (..., m)`` through the registry.
+
+    Precedence for execution choices: explicit ``plan_override`` >
+    ``policy`` argument > policy embedded in a QuantConfig shim >
+    process default policy (``set_default_policy`` / CLI flags).
+    """
+    from repro.core import linear as _linear
+
+    spec, cfg_policy = split(cfg)
+    policy = policy or cfg_policy or get_default_policy()
+    k = in_dim if in_dim is not None else _linear._infer_k(params, spec)
+    m = (params["w"].shape[0] if spec.mode == "bf16"
+         else params["scales"].shape[0])
+    p = plan_override
+    if p is None:
+        batch = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+        p = plan(spec, m, k, batch, policy=policy)
+    be = get_backend(p.backend)
+    d = plan_d(spec, m, k)
+    # full capability check — matters for explicit plans (plan_override /
+    # ExecPolicy.plan), which bypass plan()'s selection: e.g. int4_pallas
+    # would silently dequantize a learned codebook with the uniform grid
+    if not be.supports(spec, d):
+        raise ValueError(
+            f"plan backend {be.name!r} cannot execute mode={spec.mode!r} "
+            f"d={d} storage={spec.storage!r} codebook={spec.codebook!r} "
+            f"(modes={be.modes}, d_range={be.d_range}, "
+            f"storages={be.storages}, codebooks={be.codebooks})")
+    return be.run(spec, p, params, x, k=k, precision=precision)

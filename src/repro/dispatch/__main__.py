@@ -1,0 +1,10 @@
+"""``python -m repro.dispatch`` — the autotuner CLI (see autotune.py).
+
+Preferred over ``python -m repro.dispatch.autotune``: running the
+submodule as __main__ creates a second copy of its module state next to
+the one the package already imported.
+"""
+
+from repro.dispatch.autotune import main
+
+raise SystemExit(main())

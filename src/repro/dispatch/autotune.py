@@ -1,0 +1,344 @@
+"""Shape-keyed autotuner with a persistent JSON plan cache.
+
+For a (spec, m, k, batch, backend, device) key the tuner times every
+candidate tile/chunk configuration on synthetic data shaped exactly like
+the real call, picks the fastest, and persists the winner — so a serving
+process warm-starts from disk and never retunes a shape it (or any
+earlier process on the machine) has already measured.
+
+Cache location, first hit wins:
+
+1. ``REPRO_PLAN_CACHE`` env var (file path; CI points it next to the
+   benchmark artifacts);
+2. ``$XDG_CACHE_HOME/msgemm-repro/plans.json``;
+3. ``~/.cache/msgemm-repro/plans.json``.
+
+The JSON is a flat {key: plan-fields} map — human-diffable, and tolerant
+on load (a corrupt or newer-versioned file degrades to an empty cache,
+never an exception on the serving path).
+
+CLI::
+
+    python -m repro.dispatch.autotune --smoke \
+        --cache benchmarks/results/autotune_cache.json
+
+tunes a tiny interpret-mode shape grid twice, asserting the second pass
+is served entirely from the reloaded cache (the CI smoke step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.spec import QuantSpec
+from repro.dispatch import registry
+from repro.dispatch.plan import (
+    ExecPlan, ExecPolicy, heuristic_plan, plan_d, plan_key,
+)
+
+_CACHE_VERSION = 1
+# NB: 'interpret' is deliberately not persisted — it is a runtime/policy
+# choice (plan() overlays the active policy's value on cache hits), and
+# persisting it would let an interpret-mode tuning run pin the ~100x
+# slower interpreter onto later compiled runs of the same shape.
+_PLAN_FIELDS = ("backend", "tm", "tj", "tb", "consume_chunk")
+
+# observability hook: incremented per timed candidate (tests assert the
+# second run of a cached shape does zero timing)
+num_timed_candidates = 0
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_PLAN_CACHE")
+    if env:
+        return Path(env)
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return Path(base) / "msgemm-repro" / "plans.json"
+
+
+class PlanCache:
+    """In-memory view of the persistent plan cache (lazy load)."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self._plans: dict[str, ExecPlan] = {}
+        self._loaded = False
+
+    # ------------------------------------------------------------- io
+    def load(self) -> "PlanCache":
+        self._loaded = True
+        try:
+            raw = json.loads(self.path.read_text())
+            if raw.get("version") != _CACHE_VERSION:
+                return self
+            for key, fields in raw.get("plans", {}).items():
+                self._plans[key] = ExecPlan(
+                    **{f: fields.get(f) for f in _PLAN_FIELDS
+                       if fields.get(f) is not None},
+                    source="autotuned")
+        except (OSError, ValueError, TypeError):
+            pass  # absent/corrupt cache -> start empty
+        return self
+
+    def save(self) -> None:
+        payload = {"version": _CACHE_VERSION, "plans": {
+            key: {f: getattr(p, f) for f in _PLAN_FIELDS
+                  if getattr(p, f) is not None}
+            for key, p in sorted(self._plans.items())}}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=1))
+        tmp.replace(self.path)
+
+    # ----------------------------------------------------------- plans
+    def get(self, key: str) -> ExecPlan | None:
+        if not self._loaded:
+            self.load()
+        return self._plans.get(key)
+
+    def put(self, key: str, plan: ExecPlan, *, persist: bool = True) -> None:
+        if not self._loaded:
+            self.load()
+        self._plans[key] = plan
+        if persist:
+            self.save()
+
+    def __len__(self) -> int:
+        if not self._loaded:
+            self.load()
+        return len(self._plans)
+
+
+_cache: PlanCache | None = None
+
+
+def cache() -> PlanCache:
+    global _cache
+    if _cache is None:
+        _cache = PlanCache()
+    return _cache
+
+
+def set_cache_path(path: str | os.PathLike | None) -> PlanCache:
+    """Point the process at a specific cache file (None -> default)."""
+    global _cache
+    _cache = PlanCache(path)
+    return _cache
+
+
+# ------------------------------------------------------------ candidates
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def candidate_plans(spec: QuantSpec, d: int, m: int, k: int, batch: int,
+                    backend: str, interpret: bool | None) -> list[ExecPlan]:
+    """Deterministic candidate grid for one shape key.  Always contains
+    the heuristic choice, so tuning can only match or beat it."""
+    from repro.kernels import ops
+
+    pol = ExecPolicy(interpret=interpret)
+    base = heuristic_plan(spec, d, m, k, batch, backend, pol)
+    cands = {base}
+    if backend == "msgemm_jnp":
+        for chunk in (1, 2, 4, 8):
+            cands.add(dataclasses.replace(base, consume_chunk=chunk))
+    elif backend == "msgemm_pallas":
+        kc = -(-k // d)
+        cpb = spec.scale_block // d
+        n = 16 ** d
+        tjs = {t for t in (cpb, 2 * cpb, 4 * cpb, 8 * cpb)
+               if t <= max(_round_up(kc, cpb), cpb)}
+        for tj in tjs:
+            for tm in (64, 128, 256):
+                for tb in (8, 64, 128):
+                    if n * tj * tb * 4 > ops.VMEM_BUDGET:
+                        continue
+                    cands.add(dataclasses.replace(
+                        base, tm=min(tm, _round_up(m, 8)), tj=tj,
+                        tb=min(tb, _round_up(batch, 8))))
+    elif backend == "int4_pallas":
+        sb = spec.scale_block
+        for tk in (sb, 2 * sb, 4 * sb):
+            if tk % 2:
+                continue
+            for tb in (8, 64, 128):
+                cands.add(dataclasses.replace(
+                    base, tj=tk, tb=min(tb, _round_up(batch, 8))))
+    out = sorted(cands, key=lambda p: (p.tm or 0, p.tj or 0, p.tb or 0,
+                                       p.consume_chunk))
+    # interpret mode multiplies kernel cost ~100x — keep the sweep tiny
+    if interpret or (interpret is None and registry.device_kind() != "tpu"):
+        out = out[:6]
+        if base not in out:
+            out.append(base)
+    return out
+
+
+# ------------------------------------------------------------ synthetic
+def _synthetic_call(spec: QuantSpec, d: int, m: int, k: int, batch: int):
+    """Build (params, x) shaped exactly like the real linear call."""
+    from repro.core import packing
+
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, size=(m, k)).astype(np.uint8)
+    params = {"scales": np.abs(
+        rng.standard_normal((m, -(-k // spec.scale_block)))
+    ).astype(np.float32) + 0.1}
+    if spec.storage == "packed_idx":
+        params["idx"] = np.asarray(packing.pack_indices(codes, d))
+    else:
+        params["u8"] = np.asarray(packing.pack_storage(codes))
+    x = rng.standard_normal((batch, k)).astype(np.float32)
+    return params, x
+
+
+def _time_plan(backend: registry.Backend, spec: QuantSpec, p: ExecPlan,
+               params, x, k: int, reps: int) -> float:
+    global num_timed_candidates
+    num_timed_candidates += 1
+    import jax
+
+    run = lambda: jax.block_until_ready(
+        backend.run(spec, p, params, x, k=k))
+    run()  # warmup / compile
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# -------------------------------------------------------------- autotune
+def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
+             device: str | None = None, interpret: bool | None = None,
+             reps: int = 2, persist: bool = True) -> ExecPlan:
+    """Measure candidates for one shape key; cache and return the winner.
+
+    Returns the cached plan immediately when the key is known (from this
+    process or a previous one via the JSON file)."""
+    device = device or registry.device_kind()
+    be = registry.get_backend(backend)
+    d = plan_d(spec, m, k)
+    key = plan_key(backend, spec, d, m, k, batch, device)
+    hit = cache().get(key)
+    if hit is not None:
+        # interpret is runtime policy, never part of the cached tuning
+        return dataclasses.replace(hit, interpret=interpret)
+    if not be.tunable:
+        return heuristic_plan(spec, d, m, k, batch, backend,
+                              ExecPolicy(interpret=interpret))
+    cands = candidate_plans(spec, d, m, k, batch, backend, interpret)
+    params, x = _synthetic_call(spec, d, m, k, batch)
+    timed = [(_time_plan(be, spec, p, params, x, k, reps), i, p)
+             for i, p in enumerate(cands)]
+    _, _, winner = min(timed)
+    winner = dataclasses.replace(winner, source="autotuned")
+    cache().put(key, winner, persist=persist)
+    return winner
+
+
+def warm(requests, *, policy: ExecPolicy | None = None,
+         persist: bool = True) -> dict[str, ExecPlan]:
+    """Resolve a batch of collected plan requests up front (engine
+    build).  ``requests`` holds (spec, m, k, batch, backend) tuples from
+    ``dispatch.collecting()``.  With ``policy.autotune`` each tunable key
+    is measured (and its winner persisted); otherwise keys resolve to
+    their cached winner when one exists, falling back to the heuristic —
+    heuristic plans are NOT written to the cache, so a later autotune
+    run can still improve them."""
+    policy = policy or ExecPolicy()
+    out: dict[str, ExecPlan] = {}
+    device = registry.device_kind()
+    for spec, m, k, batch, backend in dict.fromkeys(requests):
+        d = plan_d(spec, m, k)
+        key = plan_key(backend, spec, d, m, k, batch, device)
+        if policy.autotune and registry.get_backend(backend).tunable:
+            out[key] = autotune(spec, m, k, batch, backend, device=device,
+                                interpret=policy.interpret, persist=persist)
+        else:
+            hit = cache().get(key)
+            out[key] = hit if hit is not None else heuristic_plan(
+                spec, d, m, k, batch, backend, policy)
+    return out
+
+
+# ------------------------------------------------------------------- CLI
+def _smoke(cache_path: str | None) -> int:
+    """Tiny interpret-mode tune: write cache -> reload -> assert hits."""
+    global num_timed_candidates
+    set_cache_path(cache_path)
+    shapes = [("msgemm", "msgemm_jnp", 2, 16, 24, 8),
+              ("msgemm", "msgemm_pallas", 2, 16, 24, 8),
+              ("int4_dequant", "int4_pallas", 2, 16, 32, 8)]
+    num_timed_candidates = 0
+    plans = {}
+    for mode, backend, d, m, k, batch in shapes:
+        spec = QuantSpec(mode=mode, d=d, scale_block=4 * d,
+                         storage="packed_u8" if backend == "int4_pallas"
+                         else "packed_idx")
+        p = autotune(spec, m, k, batch, backend, interpret=True, reps=1)
+        plans[backend] = p
+        print(f"[autotune] {backend:14s} m={m} k={k} b={batch} -> "
+              f"tm={p.tm} tj={p.tj} tb={p.tb} chunk={p.consume_chunk} "
+              f"({p.source})")
+    first_pass = num_timed_candidates
+    print(f"[autotune] cache: {cache().path} ({len(cache())} plans, "
+          f"{first_pass} candidates timed)")
+
+    # fresh in-memory cache, same file: everything must come from disk
+    set_cache_path(cache_path)
+    num_timed_candidates = 0
+    for mode, backend, d, m, k, batch in shapes:
+        spec = QuantSpec(mode=mode, d=d, scale_block=4 * d,
+                         storage="packed_u8" if backend == "int4_pallas"
+                         else "packed_idx")
+        p = autotune(spec, m, k, batch, backend, interpret=True, reps=1)
+        assert p == plans[backend], (p, plans[backend])
+    assert num_timed_candidates == 0, \
+        f"cache reload re-timed {num_timed_candidates} candidates"
+    print(f"[autotune] reload: all {len(shapes)} keys served from disk, "
+          "0 candidates re-timed")
+    return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tune + cache write->reload assertion")
+    ap.add_argument("--cache", default=None,
+                    help="plan-cache JSON path (default: REPRO_PLAN_CACHE "
+                         "env or ~/.cache/msgemm-repro/plans.json)")
+    ap.add_argument("--mode", default="msgemm",
+                    choices=["msgemm", "int4_dequant"])
+    ap.add_argument("--backend", default="msgemm_pallas")
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--interpret", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return _smoke(args.cache)
+    set_cache_path(args.cache)
+    spec = QuantSpec(mode=args.mode, d=args.d, scale_block=12 * args.d)
+    p = autotune(spec, args.m, args.k, args.batch, args.backend,
+                 interpret=args.interpret or None)
+    print(f"[autotune] winner: {p}")
+    print(f"[autotune] cache: {cache().path} ({len(cache())} plans)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,121 @@
+"""The built-in execution backends, registered as peers.
+
+Each ``run`` body is the corresponding branch that used to live inline
+in ``core.linear.apply`` (dense, jnp msGeMM, fused Pallas msGeMM,
+int4 dequant) — moved behind the registry so numerics are unchanged —
+plus ``int4_pallas``, the blocked dequant+MXU Pallas kernel that
+previously existed in ``kernels/ops`` but was never reachable from a
+model linear.
+
+Priorities encode today's defaults so registry auto-selection matches
+the old hardcoded if/elif chain: ``msgemm_jnp`` outranks the fused
+Pallas kernel everywhere except real TPU (where the fused kernel is the
+point of the paper), and ``int4_jnp`` outranks ``int4_pallas`` (the jnp
+dequant path is what `mode='int4_dequant'` always did).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as _linear
+from repro.core import lut, packing, scales
+from repro.dispatch.registry import register_backend
+
+
+def _dot_rows(x: jnp.ndarray, w: jnp.ndarray, precision=None) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=x.dtype, precision=precision)
+
+
+def run_dense(spec, plan, params, x, *, k, precision=None):
+    return _dot_rows(x, params["w"], precision=precision)
+
+
+def run_int4_jnp(spec, plan, params, x, *, k, precision=None):
+    m = params["scales"].shape[0]
+    d = spec.resolve_d(k, m)
+    codes = _linear._codes(params, spec, k, d)
+    qt = scales.QuantizedTensor(
+        codes=codes, scales=params["scales"], block=spec.scale_block,
+        shape=(codes.shape[0], k), codebook=params.get("codebook"))
+    w = scales.dequantize(qt, x.dtype)
+    return _dot_rows(x, w)
+
+
+def run_int4_pallas(spec, plan, params, x, *, k, precision=None):
+    from repro.kernels import ops as kops
+
+    if spec.storage == "packed_u8":
+        u8 = params["u8"]
+    else:
+        m = params["scales"].shape[0]
+        d = spec.resolve_d(k, m)
+        u8 = packing.pack_storage(_linear._codes(params, spec, k, d))
+    batch = x.shape[:-1]
+    y = kops.int4_matmul(
+        u8, params["scales"], x.reshape(-1, k).T,
+        scale_block=spec.scale_block, interpret=plan.interpret,
+        tm=plan.tm, tk=plan.tj, tb=plan.tb)
+    return y.T.reshape(*batch, -1).astype(x.dtype)
+
+
+def run_msgemm_jnp(spec, plan, params, x, *, k, precision=None):
+    m = params["scales"].shape[0]
+    d = spec.resolve_d(k, m)
+    codebook = params.get("codebook")
+    batch = x.shape[:-1]
+    xt = x.reshape(-1, k).T  # (k, B) — the paper's column layout
+    lut_t = lut.produce(xt, d, dtype=jnp.float32, codebook=codebook)
+    idx = params["idx"] if spec.storage == "packed_idx" else (
+        packing.indices_from_storage(params["u8"], d, k))
+    y = lut.consume(
+        lut_t, idx, scales=params["scales"], scale_block=spec.scale_block,
+        d=d, chunk=plan.consume_chunk)
+    return y.T.reshape(*batch, -1).astype(x.dtype)
+
+
+def run_msgemm_pallas(spec, plan, params, x, *, k, precision=None):
+    from repro.kernels import ops as kops
+
+    m = params["scales"].shape[0]
+    d = spec.resolve_d(k, m)
+    codes = _linear._codes(params, spec, k, d)
+    batch = x.shape[:-1]
+    y = kops.msgemm(
+        codes, x.reshape(-1, k).T, d,
+        scales=params["scales"], scale_block=spec.scale_block,
+        codebook=params.get("codebook"), interpret=plan.interpret,
+        tm=plan.tm, tj=plan.tj, tb=plan.tb)
+    return y.T.reshape(*batch, -1).astype(x.dtype)
+
+
+register_backend(
+    "dense", modes=("bf16",), run=run_dense, priority=100,
+    description="dense MXU matmul (the paper's naive GeMM, Eq. 14)")
+
+register_backend(
+    "msgemm_jnp", modes=("msgemm",), run=run_msgemm_jnp, priority=50,
+    tunable=("consume_chunk",),
+    description="produce/consume msGeMM in lowerable jnp (scan consume)")
+
+# On real TPU the fused kernel IS the paper's contribution — it outranks
+# the scan formulation there; everywhere else it only runs in interpret
+# mode, so auto-selection demotes it below msgemm_jnp.
+register_backend(
+    "msgemm_pallas", modes=("msgemm",), run=run_msgemm_pallas,
+    priority=lambda dev: 60 if dev == "tpu" else 40,
+    tunable=("tm", "tj", "tb"),
+    description="fused VMEM-tiled produce+consume Pallas kernel")
+
+register_backend(
+    "int4_jnp", modes=("int4_dequant",), run=run_int4_jnp, priority=50,
+    description="dequantize -> MXU matmul (practical current-TPU path)")
+
+register_backend(
+    "int4_pallas", modes=("int4_dequant",), run=run_int4_pallas, priority=40,
+    codebooks=("none",),  # the blocked kernel dequantizes the uniform grid
+    tunable=("tm", "tj", "tb"),
+    description="blocked dequant+dot Pallas kernel (kernels/int4_matmul)")

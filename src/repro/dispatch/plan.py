@@ -1,0 +1,234 @@
+"""ExecPlan / ExecPolicy — the physical half of a quantized linear.
+
+``plan(spec, m, k, batch) -> ExecPlan`` answers "how should THIS shape
+run on THIS device": which registered backend, which VMEM tiles, which
+consume chunking.  Plans come from three sources, in precedence order:
+
+1. an explicit ``ExecPolicy.plan`` override (tests, power users);
+2. the persistent autotune cache (shape-keyed winners measured by
+   ``repro.dispatch.autotune`` and stored as JSON, so warm serving
+   restarts skip retuning);
+3. the shape heuristic (``kernels.ops`` tile picker) — exactly what the
+   pre-registry code did, keeping default numerics identical.
+
+Plans are frozen and hashable: they ride through ``jax.jit`` as static
+closure state, and a (spec, plan) pair fully determines the lowered
+kernel.  Plan resolution happens at trace time with concrete static
+shapes — the serving engine pre-collects and warms every (shape, batch)
+it will ever step so tracing only ever hits the cache.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from dataclasses import dataclass, field, replace
+
+from repro.core.spec import QuantSpec
+from repro.dispatch import registry
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """A frozen, hashable physical execution choice.
+
+    backend : registered backend name (``repro.dispatch.registry``).
+    tm, tj, tb : kernel tiles for Pallas backends — output rows, k-axis
+        inner tile (j-chunks for msgemm, k elements for int4), batch
+        columns.  None -> the kernel wrapper's heuristic.
+    consume_chunk : j-chunks per consume scan step (jnp msgemm backend).
+    interpret : Pallas execution mode; None auto-detects (compiled on
+        TPU, interpreter elsewhere).
+    source : provenance tag — 'heuristic' | 'autotuned' | 'explicit';
+        metadata only, excluded from equality/hash.
+    """
+
+    backend: str
+    tm: int | None = None
+    tj: int | None = None
+    tb: int | None = None
+    consume_chunk: int = 1
+    interpret: bool | None = None
+    source: str = field(default="heuristic", compare=False)
+
+    def __post_init__(self):
+        if self.consume_chunk < 1:
+            raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
+
+
+@dataclass(frozen=True)
+class ExecPolicy:
+    """Preferences that *steer* planning without naming exact tiles.
+
+    backend : force a registered backend by name (None -> registry
+        auto-selection by capability + priority).
+    interpret / consume_chunk : forwarded into heuristic plans.
+    autotune : measure candidate tile configs for unseen shape keys and
+        persist winners to the plan cache.
+    plan : a fully explicit ExecPlan override (skips planning entirely).
+    """
+
+    backend: str | None = None
+    interpret: bool | None = None
+    consume_chunk: int = 1
+    autotune: bool = False
+    plan: ExecPlan | None = None
+
+    def __post_init__(self):
+        if self.consume_chunk < 1:
+            raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
+
+
+DEFAULT_POLICY = ExecPolicy()
+_default_policy: ExecPolicy = DEFAULT_POLICY
+
+
+def set_default_policy(policy: ExecPolicy | None) -> None:
+    """Install the process-wide default ExecPolicy (None resets).  CLI
+    flags (``launch/serve --backend/--autotune``) land here so the choice
+    reaches every linear without threading a new argument through the
+    model stack."""
+    global _default_policy
+    _default_policy = policy or DEFAULT_POLICY
+
+
+def get_default_policy() -> ExecPolicy:
+    return _default_policy
+
+
+@contextlib.contextmanager
+def using_policy(policy: ExecPolicy | None):
+    """Scoped default policy (the serving engine wraps its jitted step
+    calls so the policy is active exactly while tracing)."""
+    if policy is None:
+        yield
+        return
+    prev = _default_policy
+    set_default_policy(policy)
+    try:
+        yield
+    finally:
+        set_default_policy(prev)
+
+
+# ------------------------------------------------------- plan collection
+_collector: list | None = None
+
+
+@contextlib.contextmanager
+def collecting():
+    """Record every plan request made while active (autotuning is
+    suppressed).  The engine runs an abstract ``jax.eval_shape`` of its
+    step under this to enumerate the exact (spec, m, k, batch) keys it
+    will trace, then warms them concretely — plans resolved once at
+    engine build, never mid-step."""
+    global _collector
+    prev, _collector = _collector, []
+    try:
+        yield _collector
+    finally:
+        _collector = prev
+
+
+def _tracing_active() -> bool:
+    """True while inside a jax trace (jit/eval_shape/...).  Autotuning is
+    impossible there: omnistaging stages every jnp op into the ambient
+    trace, so 'timing' a candidate would just grow the traced graph (and
+    crash converting tracers to numpy).  plan() falls back to the
+    heuristic; callers that want tuned plans pre-warm the cache outside
+    the trace (collecting() + warm(), as the engine and serve CLI do)."""
+    import jax
+
+    try:
+        return not jax.core.trace_state_clean()
+    except AttributeError:  # future jax: probe with a throwaway op
+        import jax.numpy as jnp
+
+        return isinstance(jnp.zeros(()), jax.core.Tracer)
+
+
+# ---------------------------------------------------------------- keys
+def plan_d(spec: QuantSpec, m: int, k: int) -> int:
+    """The depth that keys plans/capabilities for this (spec, shape):
+    the resolved LUT depth for msgemm, the (irrelevant but stable)
+    declared d otherwise, 0 for adaptive non-msgemm."""
+    if spec.mode == "msgemm":
+        return spec.resolve_d(k, m)
+    return int(spec.d) if isinstance(spec.d, int) else 0
+
+
+def plan_key(backend: str, spec: QuantSpec, d: int, m: int, k: int,
+             batch: int, device: str) -> str:
+    """Shape key for the persistent autotune cache."""
+    return (f"{device}|{backend}|{spec.mode}|d{d}|sb{spec.scale_block}|"
+            f"{spec.storage}|cb{spec.codebook}|m{m}|k{k}|b{batch}")
+
+
+# ------------------------------------------------------------ heuristics
+def heuristic_plan(spec: QuantSpec, d: int, m: int, k: int, batch: int,
+                   backend: str, policy: ExecPolicy) -> ExecPlan:
+    """The pre-registry tile/chunk choices, as an explicit plan."""
+    from repro.kernels import ops
+
+    if backend == "msgemm_pallas":
+        kc = math.ceil(k / d)
+        tm, tj, tb = ops.msgemm_tiles(m, kc, batch, d, spec.scale_block)
+        return ExecPlan(backend=backend, tm=tm, tj=tj, tb=tb,
+                        interpret=policy.interpret)
+    if backend == "int4_pallas":
+        tm, tk, tb = ops.int4_tiles(m, k, batch, spec.scale_block)
+        return ExecPlan(backend=backend, tm=tm, tj=tk, tb=tb,
+                        interpret=policy.interpret)
+    if backend == "msgemm_jnp":
+        return ExecPlan(backend=backend, consume_chunk=policy.consume_chunk)
+    return ExecPlan(backend=backend)
+
+
+# ------------------------------------------------------------------ plan
+def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
+         device: str | None = None, policy: ExecPolicy | None = None
+         ) -> ExecPlan:
+    """Resolve the physical execution for one (spec, shape) cell.
+
+    m/k are the linear's (out, in) dims; ``batch`` the flattened
+    activation row count.  All static Python ints — safe at trace time.
+    """
+    policy = policy or get_default_policy()
+    if policy.plan is not None:
+        return policy.plan
+    device = device or registry.device_kind()
+    d = plan_d(spec, m, k)
+
+    be = None
+    if policy.backend is not None:
+        forced = registry.get_backend(policy.backend)
+        # a forced backend applies only to specs it can execute; other
+        # linears fall back to auto-selection.  This mirrors the shim's
+        # impl= semantics (it only ever forced msgemm-mode linears) and
+        # keeps model-wide --backend flags working on models that mix
+        # modes per layer (MoE experts run int4_dequant inside an
+        # msgemm model).
+        if forced.supports(spec, d):
+            be = forced
+    if be is None:
+        be = registry.select_backend(spec, d, device)
+
+    if _collector is not None:
+        _collector.append((spec, m, k, batch, be.name))
+        return heuristic_plan(spec, d, m, k, batch, be.name, policy)
+
+    import repro.dispatch.autotune as at
+
+    cached = at.cache().get(plan_key(be.name, spec, d, m, k, batch, device))
+    if cached is not None:
+        # interpret is a runtime/policy choice, not a tunable: the
+        # current policy always wins over whatever mode the plan was
+        # measured under (None -> per-backend auto-detect), so an
+        # interpret-mode tuning run can never pin the interpreter onto
+        # later compiled runs.
+        return replace(cached, interpret=policy.interpret)
+
+    if policy.autotune and be.tunable and not _tracing_active():
+        return at.autotune(spec, m, k, batch, be.name, device=device,
+                           interpret=policy.interpret)
+    return heuristic_plan(spec, d, m, k, batch, be.name, policy)

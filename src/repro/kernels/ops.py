@@ -26,27 +26,60 @@ def _round_up(v: int, mult: int) -> int:
 
 
 def _pick_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
-    """Pick (tm, tj, tb) fitting the 16^d LUT tile in the VMEM budget."""
+    """Pick (tm, tj, tb) fitting the 16^d LUT tile in the VMEM budget.
+
+    tj must stay a multiple of scale_block // d (factored-scale tiling,
+    §3.3).  Growth doubles tj only while the doubled tile still divides
+    kc evenly AND fits within kc: the old ``kc % (tj*2) == 0 or
+    kc > tj*2`` condition let non-power-of-two kc overshoot into a
+    non-divisor tile, silently padding dead columns the kernel then
+    gathered for nothing (e.g. kc=86, cpb=12 grew tj to 96 -> 10 dead
+    chunk columns per row).
+    """
     n = 16**d
     cpb = scale_block // d
     tb = min(128, _round_up(b, 8))
     tj = cpb
-    # grow tj while the LUT tile (n * tj * tb * 4B) stays in budget
-    while n * tj * 2 * tb * 4 <= VMEM_BUDGET and (kc % (tj * 2) == 0 or kc > tj * 2):
+    # grow tj while the LUT tile (n * tj * tb * 4B) stays in budget and
+    # the doubled tile still tiles kc exactly (tj <= kc, kc % tj == 0)
+    while (n * tj * 2 * tb * 4 <= VMEM_BUDGET
+           and tj * 2 <= kc and kc % (tj * 2) == 0):
         tj *= 2
     tm = min(256, _round_up(m, 8))
     return tm, tj, tb
 
 
+def msgemm_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
+    """Public heuristic tile choice for the fused msgemm kernel —
+    (tm, tj, tb) for (m rows, kc packed chunks, b batch cols).  The
+    dispatch planner records these into ExecPlans; the autotuner seeds
+    its candidate grid from them."""
+    return _pick_tiles(m, kc, b, d, scale_block)
+
+
+def int4_tiles(m: int, k: int, b: int, scale_block: int):
+    """Heuristic (tm, tk, tb) for the blocked int4 dequant kernel."""
+    tk = scale_block * max(1, 128 // scale_block)
+    tm = min(256, _round_up(m, 8))
+    tb = min(128, _round_up(b, 8))
+    return tm, tk, tb
+
+
 def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
            scales: jnp.ndarray | None = None, scale_block: int = 36,
            codebook: jnp.ndarray | None = None,
-           interpret: bool | None = None) -> jnp.ndarray:
+           interpret: bool | None = None,
+           tm: int | None = None, tj: int | None = None,
+           tb: int | None = None) -> jnp.ndarray:
     """y (m, b) = dequant(codes (m,k)) @ x (k, b) via the fused kernel.
 
     Pads every dim to tile multiples; zero code rows/cols contribute 0
     (codebooks pin value 0 at code 0, so this holds for learned tables
     too).  ``codebook``: optional (16,) non-uniform value table.
+
+    ``tm/tj/tb``: explicit tile sizes from a dispatch ExecPlan (the
+    autotuner's winners); None falls back to the heuristic.  tj must be
+    a multiple of scale_block // d (§3.3 factored-scale tiling).
     """
     m, k = codes.shape
     squeeze = x.ndim == 1
@@ -58,7 +91,8 @@ def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
     idx = packing.pack_indices(codes, d)
     kc = idx.shape[1]
 
-    tm, tj, tb = _pick_tiles(m, kc, b, d, scale_block)
+    htm, htj, htb = _pick_tiles(m, kc, b, d, scale_block)
+    tm, tj, tb = tm or htm, tj or htj, tb or htb
     mp, kcp, bp = _round_up(m, tm), _round_up(kc, tj), _round_up(b, tb)
     sj = kcp * d // scale_block
     idx_p = jnp.pad(idx, ((0, mp - m), (0, kcp - kc)))
@@ -75,17 +109,20 @@ def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
 
 
 def int4_matmul(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
-                scale_block: int = 32, interpret: bool | None = None
-                ) -> jnp.ndarray:
-    """y = dequant(packed u8 (m, k/2)) @ x (k, b) via the dequant kernel."""
+                scale_block: int = 32, interpret: bool | None = None,
+                tm: int | None = None, tk: int | None = None,
+                tb: int | None = None) -> jnp.ndarray:
+    """y = dequant(packed u8 (m, k/2)) @ x (k, b) via the dequant kernel.
+
+    ``tm/tk/tb``: explicit tiles from a dispatch ExecPlan; None falls
+    back to the heuristic (tk must be even and % scale_block == 0)."""
     m = u8.shape[0]
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
     k, b = x.shape
-    tk = scale_block * max(1, 128 // scale_block)
-    tm = min(256, _round_up(m, 8))
-    tb = min(128, _round_up(b, 8))
+    htm, htk, htb = int4_tiles(m, k, b, scale_block)
+    tm, tk, tb = tm or htm, tk or htk, tb or htb
     mp, kp, bp = _round_up(m, tm), _round_up(k, tk), _round_up(b, tb)
     u8_p = jnp.pad(u8, ((0, mp - m), (0, kp // 2 - u8.shape[1])))
     sc_p = jnp.pad(scales.astype(jnp.float32),

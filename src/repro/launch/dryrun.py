@@ -29,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.configs import shapes as shp
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh, mesh_devices
 from repro.models import transformer as T
@@ -79,15 +79,15 @@ def parse_collectives(hlo_text: str) -> dict:
     return out
 
 
-def serve_quant_config(mode: str, d=None) -> QuantConfig:
+def serve_quant_config(mode: str, d=None) -> QuantSpec:
     if mode == "bf16":
-        return QuantConfig(mode="bf16")
+        return QuantSpec(mode="bf16")
     env_d = os.environ.get("DRYRUN_D", "3")  # §Perf B/C lever
     d = d or ("adaptive" if env_d == "adaptive" else int(env_d))
     storage = os.environ.get("DRYRUN_STORAGE", "packed_idx")
-    return QuantConfig(mode=mode, d=d,
-                       scale_block=12 if d == "adaptive" else 12 * d,
-                       storage=storage, consume_chunk=1)
+    return QuantSpec(mode=mode, d=d,
+                     scale_block=12 if d == "adaptive" else 12 * d,
+                     storage=storage)
 
 
 def _key_sds():

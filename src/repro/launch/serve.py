@@ -10,7 +10,8 @@ Two engines:
   mixed-length requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --smoke \
-        --quant msgemm --engine continuous --num-requests 6
+        --quant msgemm --engine continuous --num-requests 6 \
+        --backend msgemm_pallas --autotune
 """
 
 from __future__ import annotations
@@ -21,8 +22,8 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.core.linear import QuantConfig
+from repro import configs, dispatch
+from repro.core.spec import QuantSpec
 from repro.models import transformer as T
 from repro.quant import quantize_model
 from repro.runtime import serve as SV
@@ -34,11 +35,19 @@ def build_model(args):
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(key, cfg)
     if args.quant != "bf16":
-        qc = QuantConfig(mode=args.quant, d=args.d, scale_block=12 * args.d)
-        params = quantize_model(params, cfg, qc)
-        cfg = cfg.replace(quant=qc)
+        spec = QuantSpec(mode=args.quant, d=args.d, scale_block=12 * args.d)
+        params = quantize_model(params, cfg, spec)
+        cfg = cfg.replace(quant=spec)
         print(f"[serve] quantized weights to {args.quant} (d={args.d})")
     return params, cfg, key
+
+
+def exec_policy(args) -> dispatch.ExecPolicy | None:
+    """The CLI's execution choices as an ExecPolicy (None: defaults)."""
+    backend = None if args.backend == "auto" else args.backend
+    if backend is None and not args.autotune:
+        return None
+    return dispatch.ExecPolicy(backend=backend, autotune=args.autotune)
 
 
 def run_static(args, params, cfg, key):
@@ -50,6 +59,17 @@ def run_static(args, params, cfg, key):
     elif cfg.frontend == "image_patches":
         batch["patch_embeds"] = jax.random.normal(
             key, (args.batch, cfg.num_patches, cfg.d_model))
+
+    policy = exec_policy(args)
+    if policy is not None and policy.autotune:
+        # plans must be tuned OUTSIDE the trace: collect the shape keys
+        # abstractly, warm them concretely, then generate for real
+        with dispatch.collecting() as reqs:
+            jax.eval_shape(lambda p, b: SV.generate(
+                p, cfg, b, max_new_tokens=args.new_tokens), params, batch)
+        plans = dispatch.warm(reqs, policy=policy)
+        print(f"[serve] resolved {len(plans)} exec plans before trace "
+              f"(cache={dispatch.cache().path})")
 
     t0 = time.time()
     out = SV.generate(params, cfg, batch, max_new_tokens=args.new_tokens)
@@ -83,12 +103,19 @@ def run_continuous(args, params, cfg):
                     block_size=args.block_size,
                     num_blocks=args.num_blocks or None,
                     max_model_len=max_len,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    backend=None if args.backend == "auto" else args.backend,
+                    autotune=args.autotune,
+                    autotune_cache=args.autotune_cache)
     reqs = make_request_stream(args, cfg)
     print(f"[serve] continuous engine: {len(reqs)} requests, prompt lens "
           f"{sorted(len(r.prompt) for r in reqs)}, rate="
           f"{args.arrival_rate or 'inf'} req/s, block_size="
           f"{args.block_size}, slots={args.max_slots}")
+    if engine.exec_plans:
+        print(f"[serve] resolved {len(engine.exec_plans)} exec plans at "
+              f"build (autotune={'on' if args.autotune else 'off'}, "
+              f"cache={dispatch.cache().path})")
     t0 = time.time()
     results = engine.run(reqs)
     dt = time.time() - t0
@@ -144,12 +171,26 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--check", action="store_true",
                     help="assert token parity vs the static generate path")
+    # execution planning (repro.dispatch)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto"] + dispatch.backend_names(),
+                    help="force a registered execution backend "
+                         "(auto: capability+priority selection)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="time candidate tile configs per linear shape and "
+                         "persist winners to the plan cache")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="plan-cache JSON path (default: REPRO_PLAN_CACHE "
+                         "env or ~/.cache/msgemm-repro/plans.json)")
     args = ap.parse_args(argv)
 
     params, cfg, key = build_model(args)
     if args.engine == "continuous":
         return run_continuous(args, params, cfg)
-    return run_static(args, params, cfg, key)
+    if args.autotune_cache is not None:
+        dispatch.set_cache_path(args.autotune_cache)
+    with dispatch.using_policy(exec_policy(args)):
+        return run_static(args, params, cfg, key)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 
-from repro.core.linear import DENSE, QuantConfig
+from repro.core.linear import DENSE, QuantConfig  # noqa: F401 (re-export)
+from repro.core.spec import QuantSpec
 
 
 @dataclass(frozen=True)
@@ -99,7 +100,9 @@ class ModelConfig:
     # pass so the backward does not re-all-gather them (collective -33%,
     # memory +1 group of gathered params; EXPERIMENTS.md §Perf A)
     save_gathered_weights: bool = False
-    quant: QuantConfig = field(default_factory=lambda: DENSE)
+    # weight representation (QuantSpec; the deprecated QuantConfig shim
+    # is accepted anywhere a spec is and carries its own exec policy)
+    quant: QuantSpec = field(default_factory=lambda: DENSE)
     remat: bool = True
     # 'nothing' recomputes the whole group in backward (min memory);
     # 'dots' saves matmul outputs (no re-forward of the MXU work — trades

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import linear as qlinear
-from repro.core.linear import QuantConfig
+from repro.core.spec import QuantSpec, as_spec
 from repro.models.config import ModelConfig
 
 # params dict keys that hold a QuantizedLinear (see sharding.LINEAR_AXES)
@@ -24,7 +24,7 @@ QUANTIZABLE = {
 }
 
 
-def _convert(w, quant: QuantConfig, codebook=None):
+def _convert(w, quant: QuantSpec, codebook=None):
     if w.ndim == 2:
         return qlinear.from_dense(w, quant, codebook=codebook)
     # stacked leading dims (scan groups / experts): vmap the conversion,
@@ -43,10 +43,12 @@ def _codebook_for(codebooks, path: tuple):
     return jax.numpy.asarray(codebooks)  # one shared table for every leaf
 
 
-def quantize_model(params: dict, cfg: ModelConfig, quant: QuantConfig,
+def quantize_model(params: dict, cfg: ModelConfig, quant: QuantSpec,
                    *, codebooks=None, path=()) -> dict:
     """Return a new param tree for ``cfg.with_quant(quant.mode)`` serving.
 
+    ``quant``: a QuantSpec describing the target representation (the
+    deprecated QuantConfig shim is accepted and reduced to its spec).
     ``codebooks``: optional learned value tables (repro.calib) — a single
     (16,) array shared model-wide, or a dict mapping 'a/b/leaf' path
     strings (or path tuples) to per-leaf (..., 16) tables; stacked leading
@@ -54,6 +56,7 @@ def quantize_model(params: dict, cfg: ModelConfig, quant: QuantConfig,
     entry fall back to cfg-driven behavior (uniform placeholder table
     when quant.codebook='learned', plain int4 otherwise).
     """
+    quant = as_spec(quant)
     out = {}
     for k, v in params.items():
         if k in QUANTIZABLE and isinstance(v, dict) and "w" in v:

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dispatch
 from repro.models.config import ModelConfig
 from repro.runtime import serve as SV
 from repro.serving import kv_blocks
@@ -49,13 +50,25 @@ class Engine:
     prefill_chunk : prefill token budget per engine iteration.
     on_token : optional ``f(rid, token, text)`` streaming callback, called
         as each token is generated (text via the synthetic detokenizer).
+    backend : force a registered dispatch backend by name for every
+        quantized linear (None: per-config/auto selection).
+    autotune : measure candidate tile configs for every linear shape this
+        engine will step and persist winners to the plan cache.  Plans
+        are resolved ONCE here at engine build — an abstract eval_shape
+        of both step phases collects the exact (spec, m, k, batch) keys,
+        each is tuned/warmed concretely, and the later jit traces only
+        ever hit the warm cache.
+    autotune_cache : plan-cache JSON path override (None: REPRO_PLAN_CACHE
+        env or the default user cache dir).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
                  block_size: int = 16, num_blocks: int | None = None,
                  max_model_len: int | None = None, prefill_chunk: int = 16,
                  cache_dtype=jnp.float32, on_token=None,
-                 clock=time.perf_counter, sample_seed: int = 0):
+                 clock=time.perf_counter, sample_seed: int = 0,
+                 backend: str | None = None, autotune: bool = False,
+                 autotune_cache=None):
         self.params = params
         self.cfg = cfg
         self.max_model_len = max_model_len or cfg.max_seq_len
@@ -89,6 +102,41 @@ class Engine:
         # (1, C), decode (max_slots, 1)); the pool buffer is donated so
         # the KV cache is updated in place across iterations
         self._step_fn = jax.jit(raw_step, donate_argnums=(1,))
+
+        # execution planning: resolve every linear's ExecPlan once, at
+        # build — never per step.  With no backend/autotune request the
+        # policy is None and behavior is exactly the per-config default.
+        self._policy = None
+        self.exec_plans: dict = {}
+        if backend is not None or autotune:
+            if autotune_cache is not None:
+                dispatch.set_cache_path(autotune_cache)
+            self._policy = dispatch.ExecPolicy(backend=backend,
+                                               autotune=autotune)
+            self.exec_plans = self._resolve_plans(raw_step)
+
+    def _resolve_plans(self, raw_step) -> dict:
+        """Collect the (spec, m, k, batch) plan keys both step phases
+        will request (abstract eval_shape — nothing is executed), then
+        warm/autotune each concretely so jit tracing only hits cache."""
+        B, C = self.max_slots, self.prefill_chunk
+        W = self.max_blocks_per_seq * self.block_size
+        with dispatch.using_policy(self._policy), dispatch.collecting() as reqs:
+            for nb, nt in ((1, C), (B, 1)):  # prefill chunk, decode batch
+                jax.eval_shape(
+                    raw_step, self.params, self.kv,
+                    np.zeros((nb, nt), np.int32), np.zeros((nb, nt), np.int32),
+                    np.zeros((nb, nt), np.int32), np.zeros((nb, W), np.int32),
+                    np.zeros((nb,), np.int32))
+        return dispatch.warm(reqs, policy=self._policy)
+
+    def _call_step(self, *args):
+        """Invoke the shared jitted step with this engine's exec policy
+        active — the policy is consumed at trace time (first call per
+        phase shape), where plan() finds the cache pre-warmed by
+        ``_resolve_plans``."""
+        with dispatch.using_policy(self._policy):
+            return self._step_fn(*args)
 
     # ------------------------------------------------------------- clock
     @property
@@ -146,7 +194,7 @@ class Engine:
         vs = kv_blocks.view_slots(seq.blocks, self.max_blocks_per_seq,
                                   self.block_size)[None]
         last = np.array([n - 1], np.int32)
-        tok, logits, self.kv = self._step_fn(
+        tok, logits, self.kv = self._call_step(
             self.params, self.kv, tokens, positions, ws, vs, last)
         self.num_prefill_steps += 1
         seq.prefill_pos = end
@@ -180,7 +228,7 @@ class Engine:
             vs[b] = kv_blocks.view_slots(seq.blocks, self.max_blocks_per_seq,
                                          bs)
         last = np.zeros((B,), np.int32)
-        tok, logits, self.kv = self._step_fn(
+        tok, logits, self.kv = self._call_step(
             self.params, self.kv, tokens, positions, ws, vs, last)
         self.num_decode_steps += 1
         for seq in active:

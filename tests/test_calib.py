@@ -314,3 +314,25 @@ def test_quantconfig_eager_validation():
     # valid corners still construct
     QuantConfig(mode="msgemm", d="adaptive")
     QuantConfig(mode="msgemm", d=2, scale_block=16, codebook="learned")
+
+
+def test_scale_search_never_worse_than_base():
+    """fit_block_scales' shrink search always evaluates the base
+    bounding-box scale too — candidates=1 must not shrink blocks
+    unconditionally when that increases the error."""
+    from repro.calib.fit import fit_block_scales
+
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((6, 24))
+    vals = np.asarray(uniform_values(), np.float64)
+
+    def err(s, wb):
+        z = wb / s[..., None]
+        deq = vals[np.argmin(np.abs(z[..., None] - vals), axis=-1)]
+        return ((wb - deq * s[..., None]) ** 2).sum()
+
+    base_s, wb, _ = fit_block_scales(w, uniform_values(), 12)
+    for cands in (1, 2, 5):
+        s, wb2, _ = fit_block_scales(w, uniform_values(), 12,
+                                     candidates=cands)
+        assert err(s, wb2) <= err(base_s, wb) + 1e-12, cands

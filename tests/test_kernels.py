@@ -82,6 +82,43 @@ def test_msgemm_kernel_vector_x():
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+# ----------------------------------------------------------- tile heuristic
+@pytest.mark.parametrize("d,scale_block", [(1, 6), (2, 4), (3, 12)])
+@pytest.mark.parametrize("kc", [7, 13, 29, 43, 86, 129, 255])
+def test_pick_tiles_odd_kc_no_overshoot(d, scale_block, kc):
+    """The tj-growth loop must never overshoot a non-power-of-two kc:
+    tj stays <= kc (no dead padded chunk columns beyond one tile), stays
+    a multiple of scale_block//d (§3.3 factored scales), and the LUT
+    tile fits the VMEM budget whenever growth ran at all."""
+    cpb = scale_block // d
+    tm, tj, tb = ops.msgemm_tiles(64, kc, 16, d, scale_block)
+    assert tj % cpb == 0
+    assert tj <= max(kc, cpb), (tj, kc)  # never grown past kc
+    if tj > cpb:  # growth only happens inside the budget...
+        assert 16**d * tj * tb * 4 <= ops.VMEM_BUDGET
+        assert kc % tj == 0  # ...and only into exact divisors of kc
+    # the padded chunk count never exceeds one tile of slack
+    assert -(-kc // tj) * tj - kc < tj
+
+
+def test_pick_tiles_power_of_two_unchanged():
+    """Power-of-two kc keeps the old growth behavior: doubling from
+    cpb=4 until the d=3 LUT tile hits the VMEM budget at tj=32."""
+    tm, tj, tb = ops.msgemm_tiles(64, 64, 16, 3, 12)
+    assert (tj, tb) == (32, 16) and 64 % tj == 0
+
+
+def test_msgemm_explicit_tiles_match_heuristic():
+    """ExecPlan-provided tiles produce the same result as the heuristic."""
+    d, scale_block = 2, 4
+    rng = np.random.default_rng(21)
+    codes, x, sc = _mk(rng, 16, 24, 8, scale_block)
+    want = ops.msgemm(codes, x, d, scales=sc, scale_block=scale_block)
+    got = ops.msgemm(codes, x, d, scales=sc, scale_block=scale_block,
+                     tm=8, tj=4, tb=8)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 # ------------------------------------------------------- int4_matmul kernel
 @pytest.mark.parametrize("m,k,b", [(8, 32, 4), (16, 64, 8), (64, 128, 128),
                                    (13, 40, 5)])
