@@ -35,7 +35,7 @@ def _roofline_lines() -> list[str]:
 
 
 SUITES = ("fig3", "complexity", "phase_rates", "walltime",
-          "serve_throughput", "roofline")
+          "serve_throughput", "roofline", "kernels")
 
 
 def main() -> None:
@@ -59,6 +59,16 @@ def main() -> None:
             out += m.run()
         elif name == "roofline":
             out += _roofline_lines()
+        elif name == "kernels":
+            from benchmarks import kernel_microbench as m
+            res = m.run(shapes=m.SMOKE_SHAPES, reps=2)
+            out += [
+                f"kernels/{r['shape']},{r['new_kernel_s'] * 1e6:.1f},"
+                f"legacy_us={r['legacy_kernel_s'] * 1e6:.1f} "
+                f"speedup={r['speedup_new_vs_legacy']:.2f} "
+                f"amort={r['produce_amortization_factor']} "
+                f"parity={r['identity_parity_bitexact_vs_ref']}"
+                for r in res["shapes"]]
         else:
             raise SystemExit(f"unknown suite {name}; pick from {SUITES}")
     seen_header = False

@@ -1,0 +1,106 @@
+"""Epilogue — the element-wise tail fused into a quantized GeMM.
+
+EmuGEMM's observation (PAPERS.md) is that once the GeMM itself is fast,
+the remaining wall time hides in the element-wise ops issued *around* it:
+bias add, activation, residual add, output cast.  Each of those is an
+extra HBM round trip over the (..., m) output.  An :class:`Epilogue`
+describes that tail declaratively so a kernel backend can execute it
+inside its final VMEM writeback (kernels/msgemm.py, kernels/int4_matmul.py)
+while non-fusing backends fall back to :func:`apply_epilogue` — the exact
+same math as separate jnp ops, so fused and unfused paths agree.
+
+The op order is fixed and identical in both implementations::
+
+    y = act(acc + bias) + residual      # then cast to out_dtype
+
+which is the transformer convention (bias before activation, residual
+after).  ``Epilogue()`` is the identity: backends must produce bit-
+identical results to a no-epilogue call for it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = ("none", "relu", "gelu", "silu")
+
+
+def _act_fn(name: str):
+    return {"none": lambda v: v, "relu": jax.nn.relu,
+            "gelu": jax.nn.gelu, "silu": jax.nn.silu}[name]
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """Frozen, hashable description of the fused element-wise tail.
+
+    act : activation applied after the bias add — one of
+        ``none | relu | gelu | silu``.
+    bias : whether a per-output-row bias vector (m,) is added to the
+        accumulator before the activation.
+    residual : whether a residual tensor (shaped like the output) is
+        added after the activation.
+    out_dtype : output dtype name (e.g. ``'bfloat16'``); None keeps the
+        accumulation dtype.
+
+    Hashable so it rides through ``jax.jit`` as static closure state and
+    can key backend capability checks (registry.supports_epilogue).
+    """
+
+    act: str = "none"
+    bias: bool = False
+    residual: bool = False
+    out_dtype: str | None = None
+
+    def __post_init__(self):
+        if self.act not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation {self.act!r}; "
+                f"one of {ACTIVATIONS}")
+        if self.out_dtype is not None:
+            jnp.dtype(self.out_dtype)  # eager validation
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.act == "none" and not self.bias and not self.residual
+                and self.out_dtype is None)
+
+    def act_fn(self):
+        return _act_fn(self.act)
+
+
+IDENTITY = Epilogue()
+
+
+def apply_epilogue(y: jnp.ndarray, ep: Epilogue | None,
+                   bias: jnp.ndarray | None = None,
+                   residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Unfused fallback path: y (..., m) row-major model layout.
+
+    Used by backends that cannot fuse (dense / jnp paths).  The tail is
+    computed at float32-or-better — matching the fused kernels, which run
+    it on the f32 VMEM accumulator — then cast back.  For f32 models the
+    two routes are the same ops on the same values; for low-precision
+    activations they can differ by final-rounding ulps (the unfused route
+    sees the GeMM output after its cast to the activation dtype, the
+    fused route sees the un-rounded accumulator).
+    """
+    if ep is None or ep.is_identity:
+        return y
+    in_dtype = y.dtype
+    compute = jnp.promote_types(in_dtype, jnp.float32)
+    y = y.astype(compute)
+    if ep.bias:
+        if bias is None:
+            raise ValueError("Epilogue.bias set but no bias array given")
+        y = y + bias.astype(compute)
+    y = ep.act_fn()(y)
+    if ep.residual:
+        if residual is None:
+            raise ValueError(
+                "Epilogue.residual set but no residual array given")
+        y = y + residual.astype(compute)
+    return y.astype(ep.out_dtype if ep.out_dtype is not None else in_dtype)

@@ -174,7 +174,8 @@ def from_quantized(qt: scales.QuantizedTensor, cfg) -> dict:
 
 def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
           in_dim: int | None = None, precision=None,
-          tag: str | None = None, plan=None, policy=None) -> jnp.ndarray:
+          tag: str | None = None, plan=None, policy=None,
+          epilogue=None, bias=None, residual=None) -> jnp.ndarray:
     """x (..., in) -> y (..., out), through the dispatch registry.
 
     ``cfg`` is a QuantSpec (or deprecated QuantConfig, whose embedded
@@ -183,6 +184,11 @@ def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
     the shim's and the process default.  ``tag`` names this linear for
     the activation-statistics observer (calibration); it does not affect
     the computation.
+
+    ``epilogue`` (core.epilogue.Epilogue) + ``bias`` (out,) +
+    ``residual`` (..., out): the element-wise tail fused into the kernel
+    writeback when the planned backend supports it, applied unfused
+    (identical math) otherwise — see dispatch.execute.
     """
     if _OBSERVER is not None and tag is not None:
         _OBSERVER.record(tag, x)
@@ -190,7 +196,8 @@ def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
 
     return dispatch.execute(params, x, cfg, in_dim=in_dim,
                             precision=precision, plan_override=plan,
-                            policy=policy)
+                            policy=policy, epilogue=epilogue, bias=bias,
+                            residual=residual)
 
 
 def _infer_k(params: dict, cfg) -> int:

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import math
 
+from repro.core.epilogue import Epilogue, apply_epilogue  # noqa: F401
 from repro.core.spec import QuantSpec, as_spec
 from repro.dispatch.registry import (  # noqa: F401
     Backend, available_backends, backend_names, device_kind, get_backend,
@@ -51,12 +52,25 @@ def split(cfg) -> tuple[QuantSpec, ExecPolicy | None]:
 
 def execute(params: dict, x, cfg, *, in_dim: int | None = None,
             precision=None, plan_override: ExecPlan | None = None,
-            policy: ExecPolicy | None = None):
+            policy: ExecPolicy | None = None, epilogue: Epilogue | None = None,
+            bias=None, residual=None):
     """Run one linear ``x (..., k) -> y (..., m)`` through the registry.
 
     Precedence for execution choices: explicit ``plan_override`` >
     ``policy`` argument > policy embedded in a QuantConfig shim >
     process default policy (``set_default_policy`` / CLI flags).
+
+    ``epilogue`` (core.epilogue.Epilogue) describes the element-wise tail
+    ``y = act(y + bias) + residual`` (then cast).  When the plan allows
+    fusion (``plan.epilogue``) and the backend's capability predicate
+    accepts the spec, the tail executes inside the kernel's final VMEM
+    writeback — zero extra HBM passes; otherwise the same op sequence
+    runs unfused after ``run`` (apply_epilogue, computed at f32-or-better
+    like the fused accumulator).  For f32 activations the two routes are
+    the same function; at lower activation precision they can differ by
+    final-rounding ulps (the unfused route sees the GeMM output after
+    its activation-dtype cast).  ``bias`` is (m,); ``residual`` matches
+    the output shape (..., m) — both row-major model layout.
     """
     from repro.core import linear as _linear
 
@@ -80,4 +94,23 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
             f"d={d} storage={spec.storage!r} codebook={spec.codebook!r} "
             f"(modes={be.modes}, d_range={be.d_range}, "
             f"storages={be.storages}, codebooks={be.codebooks})")
-    return be.run(spec, p, params, x, k=k, precision=precision)
+    # a bias/residual array without a matching Epilogue flag would be
+    # silently ignored by both the fused and unfused paths — reject it
+    # (the inverse mismatch, flag without array, already raises)
+    if bias is not None and (epilogue is None or not epilogue.bias):
+        raise ValueError(
+            "bias array given but the epilogue does not declare bias=True "
+            "(pass epilogue=Epilogue(bias=True, ...) — or use "
+            "common.linear_apply, which builds it for you)")
+    if residual is not None and (epilogue is None or not epilogue.residual):
+        raise ValueError(
+            "residual array given but the epilogue does not declare "
+            "residual=True (pass epilogue=Epilogue(residual=True, ...) — "
+            "or use common.linear_apply, which builds it for you)")
+    fuse = (epilogue is not None and not epilogue.is_identity
+            and p.epilogue and be.epilogue_ok(epilogue))
+    if fuse:
+        return be.run(spec, p, params, x, k=k, precision=precision,
+                      epilogue=epilogue, bias=bias, residual=residual)
+    y = be.run(spec, p, params, x, k=k, precision=precision)
+    return apply_epilogue(y, epilogue, bias=bias, residual=residual)

@@ -42,12 +42,13 @@ from repro.dispatch.plan import (
     ExecPlan, ExecPolicy, heuristic_plan, plan_d, plan_key,
 )
 
-_CACHE_VERSION = 1
+_CACHE_VERSION = 2  # v2: +acc_in_vmem/acc_dtype/epilogue, key gains acc_dtype
 # NB: 'interpret' is deliberately not persisted — it is a runtime/policy
 # choice (plan() overlays the active policy's value on cache hits), and
 # persisting it would let an interpret-mode tuning run pin the ~100x
 # slower interpreter onto later compiled runs of the same shape.
-_PLAN_FIELDS = ("backend", "tm", "tj", "tb", "consume_chunk")
+_PLAN_FIELDS = ("backend", "tm", "tj", "tb", "consume_chunk",
+                "acc_in_vmem", "acc_dtype", "epilogue")
 
 # observability hook: incremented per timed candidate (tests assert the
 # second run of a cached shape does zero timing)
@@ -139,14 +140,20 @@ def _round_up(v: int, mult: int) -> int:
 
 
 def candidate_plans(spec: QuantSpec, d: int, m: int, k: int, batch: int,
-                    backend: str, interpret: bool | None) -> list[ExecPlan]:
+                    backend: str, interpret: bool | None,
+                    acc_dtype: str = "float32") -> list[ExecPlan]:
     """Deterministic candidate grid for one shape key.  Always contains
-    the heuristic choice, so tuning can only match or beat it."""
+    the heuristic choice, so tuning can only match or beat it.  For the
+    Pallas backends the grid also covers the accumulation knob
+    (``acc_in_vmem`` False — the legacy per-step formulation), so a shape
+    where the reordered grid somehow loses is caught by measurement."""
     from repro.kernels import ops
 
-    pol = ExecPolicy(interpret=interpret)
+    pol = ExecPolicy(interpret=interpret, acc_dtype=acc_dtype)
     base = heuristic_plan(spec, d, m, k, batch, backend, pol)
     cands = {base}
+    if backend in ("msgemm_pallas", "int4_pallas"):
+        cands.add(dataclasses.replace(base, acc_in_vmem=False))
     if backend == "msgemm_jnp":
         for chunk in (1, 2, 4, 8):
             cands.add(dataclasses.replace(base, consume_chunk=chunk))
@@ -161,9 +168,15 @@ def candidate_plans(spec: QuantSpec, d: int, m: int, k: int, batch: int,
                 for tb in (8, 64, 128):
                     if n * tj * tb * 4 > ops.VMEM_BUDGET:
                         continue
+                    tmv = min(tm, _round_up(m, 8))
+                    tbv = min(tb, _round_up(batch, 8))
                     cands.add(dataclasses.replace(
-                        base, tm=min(tm, _round_up(m, 8)), tj=tj,
-                        tb=min(tb, _round_up(batch, 8))))
+                        base, tm=tmv, tj=tj, tb=tbv,
+                        # keep the persisted flag truthful: a candidate
+                        # whose stripe cannot fit runs (and is timed as)
+                        # the legacy accumulation
+                        acc_in_vmem=base.acc_in_vmem
+                        and ops.acc_stripe_fits(m, tmv, tbv)))
     elif backend == "int4_pallas":
         sb = spec.scale_block
         for tk in (sb, 2 * sb, 4 * sb):
@@ -173,12 +186,16 @@ def candidate_plans(spec: QuantSpec, d: int, m: int, k: int, batch: int,
                 cands.add(dataclasses.replace(
                     base, tj=tk, tb=min(tb, _round_up(batch, 8))))
     out = sorted(cands, key=lambda p: (p.tm or 0, p.tj or 0, p.tb or 0,
-                                       p.consume_chunk))
+                                       p.consume_chunk, p.acc_in_vmem))
     # interpret mode multiplies kernel cost ~100x — keep the sweep tiny
     if interpret or (interpret is None and registry.device_kind() != "tpu"):
         out = out[:6]
         if base not in out:
             out.append(base)
+        if backend in ("msgemm_pallas", "int4_pallas"):
+            legacy = dataclasses.replace(base, acc_in_vmem=False)
+            if legacy not in out:  # keep the acc knob measurable
+                out.append(legacy)
     return out
 
 
@@ -220,7 +237,8 @@ def _time_plan(backend: registry.Backend, spec: QuantSpec, p: ExecPlan,
 # -------------------------------------------------------------- autotune
 def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
              device: str | None = None, interpret: bool | None = None,
-             reps: int = 2, persist: bool = True) -> ExecPlan:
+             acc_dtype: str = "float32", reps: int = 2,
+             persist: bool = True) -> ExecPlan:
     """Measure candidates for one shape key; cache and return the winner.
 
     Returns the cached plan immediately when the key is known (from this
@@ -228,22 +246,26 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
     device = device or registry.device_kind()
     be = registry.get_backend(backend)
     d = plan_d(spec, m, k)
-    key = plan_key(backend, spec, d, m, k, batch, device)
+    key = plan_key(backend, spec, d, m, k, batch, device, acc_dtype)
     hit = cache().get(key)
     if hit is not None:
         # interpret is runtime policy, never part of the cached tuning
         return dataclasses.replace(hit, interpret=interpret)
     if not be.tunable:
         return heuristic_plan(spec, d, m, k, batch, backend,
-                              ExecPolicy(interpret=interpret))
-    cands = candidate_plans(spec, d, m, k, batch, backend, interpret)
+                              ExecPolicy(interpret=interpret,
+                                         acc_dtype=acc_dtype))
+    cands = candidate_plans(spec, d, m, k, batch, backend, interpret,
+                            acc_dtype)
     params, x = _synthetic_call(spec, d, m, k, batch)
     timed = [(_time_plan(be, spec, p, params, x, k, reps), i, p)
              for i, p in enumerate(cands)]
     _, _, winner = min(timed)
     winner = dataclasses.replace(winner, source="autotuned")
     cache().put(key, winner, persist=persist)
-    return winner
+    # same contract as a cache hit: the caller's interpret overlays the
+    # winner (a fresh tune and a reload must return identical plans)
+    return dataclasses.replace(winner, interpret=interpret)
 
 
 def warm(requests, *, policy: ExecPolicy | None = None,
@@ -260,10 +282,12 @@ def warm(requests, *, policy: ExecPolicy | None = None,
     device = registry.device_kind()
     for spec, m, k, batch, backend in dict.fromkeys(requests):
         d = plan_d(spec, m, k)
-        key = plan_key(backend, spec, d, m, k, batch, device)
+        key = plan_key(backend, spec, d, m, k, batch, device,
+                       policy.acc_dtype)
         if policy.autotune and registry.get_backend(backend).tunable:
             out[key] = autotune(spec, m, k, batch, backend, device=device,
-                                interpret=policy.interpret, persist=persist)
+                                interpret=policy.interpret,
+                                acc_dtype=policy.acc_dtype, persist=persist)
         else:
             hit = cache().get(key)
             out[key] = hit if hit is not None else heuristic_plan(

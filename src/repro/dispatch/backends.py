@@ -3,9 +3,14 @@
 Each ``run`` body is the corresponding branch that used to live inline
 in ``core.linear.apply`` (dense, jnp msGeMM, fused Pallas msGeMM,
 int4 dequant) — moved behind the registry so numerics are unchanged —
-plus ``int4_pallas``, the blocked dequant+MXU Pallas kernel that
-previously existed in ``kernels/ops`` but was never reachable from a
-model linear.
+plus ``int4_pallas``, the blocked dequant+MXU Pallas kernel.
+
+``run`` takes optional ``epilogue``/``bias``/``residual`` kwargs:
+``dispatch.execute`` only passes them when the backend's ``epilogue_ok``
+predicate accepted the requested :class:`core.epilogue.Epilogue` (and
+the plan allows fusion) — the Pallas kernels then execute the tail
+inside their final VMEM writeback; every other backend never sees an
+epilogue and ``execute`` applies it unfused after ``run``.
 
 Priorities encode today's defaults so registry auto-selection matches
 the old hardcoded if/elif chain: ``msgemm_jnp`` outranks the fused
@@ -30,11 +35,31 @@ def _dot_rows(x: jnp.ndarray, w: jnp.ndarray, precision=None) -> jnp.ndarray:
         preferred_element_type=x.dtype, precision=precision)
 
 
-def run_dense(spec, plan, params, x, *, k, precision=None):
+def _residual_cols(residual, m: int):
+    """Model-layout residual (..., m) -> the kernels' (m, B) columns."""
+    if residual is None:
+        return None
+    return residual.reshape(-1, m).T
+
+
+def _out_dtype(epilogue, x):
+    return (jnp.dtype(epilogue.out_dtype)
+            if epilogue is not None and epilogue.out_dtype else x.dtype)
+
+
+def _pallas_epilogue_ok(epilogue) -> bool:
+    """Both Pallas kernels fuse the full epilogue envelope: any
+    activation in core.epilogue.ACTIVATIONS, bias, residual, out cast."""
+    return True
+
+
+def run_dense(spec, plan, params, x, *, k, precision=None, epilogue=None,
+              bias=None, residual=None):
     return _dot_rows(x, params["w"], precision=precision)
 
 
-def run_int4_jnp(spec, plan, params, x, *, k, precision=None):
+def run_int4_jnp(spec, plan, params, x, *, k, precision=None, epilogue=None,
+                 bias=None, residual=None):
     m = params["scales"].shape[0]
     d = spec.resolve_d(k, m)
     codes = _linear._codes(params, spec, k, d)
@@ -45,24 +70,29 @@ def run_int4_jnp(spec, plan, params, x, *, k, precision=None):
     return _dot_rows(x, w)
 
 
-def run_int4_pallas(spec, plan, params, x, *, k, precision=None):
+def run_int4_pallas(spec, plan, params, x, *, k, precision=None,
+                    epilogue=None, bias=None, residual=None):
     from repro.kernels import ops as kops
 
+    m = params["scales"].shape[0]
     if spec.storage == "packed_u8":
         u8 = params["u8"]
     else:
-        m = params["scales"].shape[0]
         d = spec.resolve_d(k, m)
         u8 = packing.pack_storage(_linear._codes(params, spec, k, d))
     batch = x.shape[:-1]
     y = kops.int4_matmul(
         u8, params["scales"], x.reshape(-1, k).T,
         scale_block=spec.scale_block, interpret=plan.interpret,
-        tm=plan.tm, tk=plan.tj, tb=plan.tb)
-    return y.T.reshape(*batch, -1).astype(x.dtype)
+        tm=plan.tm, tk=plan.tj, tb=plan.tb,
+        acc_dtype=jnp.dtype(plan.acc_dtype), acc_in_vmem=plan.acc_in_vmem,
+        epilogue=epilogue, bias=bias,
+        residual=_residual_cols(residual, m))
+    return y.T.reshape(*batch, -1).astype(_out_dtype(epilogue, x))
 
 
-def run_msgemm_jnp(spec, plan, params, x, *, k, precision=None):
+def run_msgemm_jnp(spec, plan, params, x, *, k, precision=None,
+                   epilogue=None, bias=None, residual=None):
     m = params["scales"].shape[0]
     d = spec.resolve_d(k, m)
     codebook = params.get("codebook")
@@ -77,7 +107,8 @@ def run_msgemm_jnp(spec, plan, params, x, *, k, precision=None):
     return y.T.reshape(*batch, -1).astype(x.dtype)
 
 
-def run_msgemm_pallas(spec, plan, params, x, *, k, precision=None):
+def run_msgemm_pallas(spec, plan, params, x, *, k, precision=None,
+                      epilogue=None, bias=None, residual=None):
     from repro.kernels import ops as kops
 
     m = params["scales"].shape[0]
@@ -88,8 +119,11 @@ def run_msgemm_pallas(spec, plan, params, x, *, k, precision=None):
         codes, x.reshape(-1, k).T, d,
         scales=params["scales"], scale_block=spec.scale_block,
         codebook=params.get("codebook"), interpret=plan.interpret,
-        tm=plan.tm, tj=plan.tj, tb=plan.tb)
-    return y.T.reshape(*batch, -1).astype(x.dtype)
+        tm=plan.tm, tj=plan.tj, tb=plan.tb,
+        acc_dtype=jnp.dtype(plan.acc_dtype), acc_in_vmem=plan.acc_in_vmem,
+        epilogue=epilogue, bias=bias,
+        residual=_residual_cols(residual, m))
+    return y.T.reshape(*batch, -1).astype(_out_dtype(epilogue, x))
 
 
 register_backend(
@@ -107,8 +141,10 @@ register_backend(
 register_backend(
     "msgemm_pallas", modes=("msgemm",), run=run_msgemm_pallas,
     priority=lambda dev: 60 if dev == "tpu" else 40,
-    tunable=("tm", "tj", "tb"),
-    description="fused VMEM-tiled produce+consume Pallas kernel")
+    tunable=("tm", "tj", "tb", "acc_in_vmem"),
+    epilogue_ok=_pallas_epilogue_ok,
+    description="fused VMEM-tiled produce+consume Pallas kernel "
+                "(amortized produce, VMEM acc stripe, fused epilogue)")
 
 register_backend(
     "int4_jnp", modes=("int4_dequant",), run=run_int4_jnp, priority=50,
@@ -117,5 +153,6 @@ register_backend(
 register_backend(
     "int4_pallas", modes=("int4_dequant",), run=run_int4_pallas, priority=40,
     codebooks=("none",),  # the blocked kernel dequantizes the uniform grid
-    tunable=("tm", "tj", "tb"),
+    tunable=("tm", "tj", "tb", "acc_in_vmem"),
+    epilogue_ok=_pallas_epilogue_ok,
     description="blocked dequant+dot Pallas kernel (kernels/int4_matmul)")

@@ -28,6 +28,9 @@ from repro.core.spec import QuantSpec
 from repro.dispatch import registry
 
 
+ACC_DTYPES = ("float32", "bfloat16", "float16", "float64")
+
+
 @dataclass(frozen=True)
 class ExecPlan:
     """A frozen, hashable physical execution choice.
@@ -37,6 +40,17 @@ class ExecPlan:
         inner tile (j-chunks for msgemm, k elements for int4), batch
         columns.  None -> the kernel wrapper's heuristic.
     consume_chunk : j-chunks per consume scan step (jnp msgemm backend).
+    acc_in_vmem : Pallas kernels accumulate in VMEM scratch with a single
+        HBM writeback (the reordered produce-amortized msgemm grid);
+        False selects the legacy per-step ``y_ref +=`` formulation (kept
+        as a baseline and autotuner candidate).
+    acc_dtype : accumulation dtype name for the Pallas kernels; part of
+        the autotune cache key (a plan measured at one precision never
+        serves another).
+    epilogue : allow fusing a requested core.epilogue.Epilogue into the
+        kernel's final writeback when the backend's capability predicate
+        accepts it; False forces the unfused fallback (execute applies
+        the same ops after the GeMM).
     interpret : Pallas execution mode; None auto-detects (compiled on
         TPU, interpreter elsewhere).
     source : provenance tag — 'heuristic' | 'autotuned' | 'explicit';
@@ -48,12 +62,18 @@ class ExecPlan:
     tj: int | None = None
     tb: int | None = None
     consume_chunk: int = 1
+    acc_in_vmem: bool = True
+    acc_dtype: str = "float32"
+    epilogue: bool = True
     interpret: bool | None = None
     source: str = field(default="heuristic", compare=False)
 
     def __post_init__(self):
         if self.consume_chunk < 1:
             raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
+        if self.acc_dtype not in ACC_DTYPES:
+            raise ValueError(f"acc_dtype={self.acc_dtype!r} must be one of "
+                             f"{ACC_DTYPES}")
 
 
 @dataclass(frozen=True)
@@ -62,7 +82,8 @@ class ExecPolicy:
 
     backend : force a registered backend by name (None -> registry
         auto-selection by capability + priority).
-    interpret / consume_chunk : forwarded into heuristic plans.
+    interpret / consume_chunk / acc_dtype : forwarded into heuristic
+        plans (acc_dtype also keys the autotune cache).
     autotune : measure candidate tile configs for unseen shape keys and
         persist winners to the plan cache.
     plan : a fully explicit ExecPlan override (skips planning entirely).
@@ -71,12 +92,16 @@ class ExecPolicy:
     backend: str | None = None
     interpret: bool | None = None
     consume_chunk: int = 1
+    acc_dtype: str = "float32"
     autotune: bool = False
     plan: ExecPlan | None = None
 
     def __post_init__(self):
         if self.consume_chunk < 1:
             raise ValueError(f"consume_chunk={self.consume_chunk} must be >= 1")
+        if self.acc_dtype not in ACC_DTYPES:
+            raise ValueError(f"acc_dtype={self.acc_dtype!r} must be one of "
+                             f"{ACC_DTYPES}")
 
 
 DEFAULT_POLICY = ExecPolicy()
@@ -158,26 +183,41 @@ def plan_d(spec: QuantSpec, m: int, k: int) -> int:
 
 
 def plan_key(backend: str, spec: QuantSpec, d: int, m: int, k: int,
-             batch: int, device: str) -> str:
-    """Shape key for the persistent autotune cache."""
+             batch: int, device: str, acc_dtype: str = "float32") -> str:
+    """Shape key for the persistent autotune cache.  ``acc_dtype`` is
+    part of the key: a winner measured at one accumulation precision is
+    never served to a caller asking for another."""
     return (f"{device}|{backend}|{spec.mode}|d{d}|sb{spec.scale_block}|"
-            f"{spec.storage}|cb{spec.codebook}|m{m}|k{k}|b{batch}")
+            f"{spec.storage}|cb{spec.codebook}|m{m}|k{k}|b{batch}|"
+            f"acc{acc_dtype}")
 
 
 # ------------------------------------------------------------ heuristics
 def heuristic_plan(spec: QuantSpec, d: int, m: int, k: int, batch: int,
                    backend: str, policy: ExecPolicy) -> ExecPlan:
-    """The pre-registry tile/chunk choices, as an explicit plan."""
+    """The shape-heuristic tile/chunk choices, as an explicit plan.
+
+    Small-batch (decode) shapes get their presets through
+    ``ops.msgemm_tiles``: tb is sized to the actual batch (round_up(b, 8),
+    never padded to 128) and the LUT budget freed by the narrow stripe
+    lets tj — and for decode shapes tm — grow, which is where the
+    produce-amortized kernel wins hardest (large-m, small-b)."""
     from repro.kernels import ops
 
     if backend == "msgemm_pallas":
         kc = math.ceil(k / d)
         tm, tj, tb = ops.msgemm_tiles(m, kc, batch, d, spec.scale_block)
         return ExecPlan(backend=backend, tm=tm, tj=tj, tb=tb,
+                        # vocab-sized m can't hold a VMEM stripe: plan the
+                        # legacy accumulation up front (the ops wrapper
+                        # guards the same condition as a backstop)
+                        acc_in_vmem=ops.acc_stripe_fits(m, tm, tb),
+                        acc_dtype=policy.acc_dtype,
                         interpret=policy.interpret)
     if backend == "int4_pallas":
         tm, tk, tb = ops.int4_tiles(m, k, batch, spec.scale_block)
         return ExecPlan(backend=backend, tm=tm, tj=tk, tb=tb,
+                        acc_dtype=policy.acc_dtype,
                         interpret=policy.interpret)
     if backend == "msgemm_jnp":
         return ExecPlan(backend=backend, consume_chunk=policy.consume_chunk)
@@ -219,7 +259,8 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
 
     import repro.dispatch.autotune as at
 
-    cached = at.cache().get(plan_key(be.name, spec, d, m, k, batch, device))
+    cached = at.cache().get(plan_key(be.name, spec, d, m, k, batch, device,
+                                     policy.acc_dtype))
     if cached is not None:
         # interpret is a runtime/policy choice, not a tunable: the
         # current policy always wins over whatever mode the plan was
@@ -230,5 +271,6 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
 
     if policy.autotune and be.tunable and not _tracing_active():
         return at.autotune(spec, m, k, batch, be.name, device=device,
-                           interpret=policy.interpret)
+                           interpret=policy.interpret,
+                           acc_dtype=policy.acc_dtype)
     return heuristic_plan(spec, d, m, k, batch, be.name, policy)

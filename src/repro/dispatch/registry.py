@@ -30,6 +30,12 @@ def _always(device_kind: str) -> bool:
     return True
 
 
+def _no_epilogue(epilogue) -> bool:
+    """Default epilogue capability: fuse nothing (dispatch.execute applies
+    the epilogue unfused after ``run`` — core.epilogue.apply_epilogue)."""
+    return False
+
+
 @dataclass(frozen=True)
 class Backend:
     """A registered execution path with its capability envelope."""
@@ -46,6 +52,10 @@ class Backend:
     storages: tuple[str, ...] = ("packed_idx", "packed_u8")
     codebooks: tuple[str, ...] = ("none", "learned")
     tunable: tuple[str, ...] = ()      # ExecPlan fields the autotuner explores
+    # epilogue capability predicate: can this backend execute the given
+    # core.epilogue.Epilogue *inside* its kernel (fused into the final
+    # writeback)?  False -> dispatch.execute applies it unfused after run.
+    epilogue_ok: Callable = _no_epilogue
     description: str = ""
 
     def priority_for(self, device_kind: str) -> int:
@@ -72,6 +82,7 @@ def register_backend(name: str, *, modes, run, is_available=_always,
                      priority: int = 0, d_range=(1, 4),
                      storages=("packed_idx", "packed_u8"),
                      codebooks=("none", "learned"), tunable=(),
+                     epilogue_ok=_no_epilogue,
                      description: str = "", overwrite: bool = False) -> Backend:
     """Register an execution backend.  Raises on duplicate names unless
     ``overwrite`` (tests use overwrite to shadow a backend temporarily)."""
@@ -82,6 +93,7 @@ def register_backend(name: str, *, modes, run, is_available=_always,
                  is_available=is_available, priority=priority,
                  d_range=tuple(d_range), storages=tuple(storages),
                  codebooks=tuple(codebooks), tunable=tuple(tunable),
+                 epilogue_ok=epilogue_ok,
                  description=description)
     _REGISTRY[name] = be
     return be

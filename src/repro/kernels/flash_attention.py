@@ -6,11 +6,18 @@ never materialize (the jnp path q-chunks via lax.scan; this kernel is the
 TPU-native tile version with the online-softmax rescaling, so the working
 set is one (TQ, TK) tile + the (TQ, dh) accumulator in VMEM).
 
-Grid: (batch·heads, q blocks); the kernel loops over k blocks with a
+Grid: (batch, q heads, q blocks); the kernel loops over k blocks with a
 fori_loop carrying (m, l, acc) — the standard flash recurrence:
 
     m' = max(m, rowmax(s));  p = exp(s - m');  c = exp(m - m')
     l' = c·l + rowsum(p);    acc' = c·acc + p @ v
+
+GQA/MQA is resolved *in the index maps*: k/v keep their native
+(B, Hk, Skv, dh) layout and the kv block index is ``h // (H // Hk)`` —
+each kv head streams from HBM once per query-head group instead of being
+expanded H//Hk-fold into a materialized ``jnp.repeat`` copy first (the
+old wrapper's behavior, which multiplied both HBM footprint and
+bandwidth by the group size).
 
 Supports causal masking, sliding windows (gemma2 'local'), and logit
 soft-capping.  Validated against ref.flash_attention_ref in interpret
@@ -29,15 +36,17 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
             window: int, softcap: float, scale: float):
-    iq = pl.program_id(1)
-    qb = q_ref[0].astype(jnp.float32) * scale  # (TQ, dh)
-    S = k_ref.shape[1]
+    iq = pl.program_id(2)
+    qb = q_ref[...][0, 0].astype(jnp.float32) * scale  # (TQ, dh)
+    kfull = k_ref[...][0, 0]  # (Skv, dh) — this kv head's whole block
+    vfull = v_ref[...][0, 0]
+    S = kfull.shape[0]
     qpos = iq * tq + jax.lax.iota(jnp.int32, tq)
 
     def body(j, carry):
         m, l, acc = carry
-        kb = pl.load(k_ref, (0, pl.dslice(j * tk, tk), slice(None)))
-        vb = pl.load(v_ref, (0, pl.dslice(j * tk, tk), slice(None)))
+        kb = jax.lax.dynamic_slice_in_dim(kfull, j * tk, tk, axis=0)
+        vb = jax.lax.dynamic_slice_in_dim(vfull, j * tk, tk, axis=0)
         s = qb @ kb.astype(jnp.float32).T  # (TQ, TK)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
@@ -65,7 +74,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
     else:
         nk_eff = nk
     m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, a0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(
+        o_ref.dtype)[None, None]
 
 
 @functools.partial(
@@ -74,27 +84,32 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            softcap: float = 0.0, tq: int = 128,
                            tk: int = 128, interpret: bool | None = None):
-    """q (BH, Sq, dh), k/v (BH, Skv, dh) -> (BH, Sq, dh).
+    """q (B, H, Sq, dh), k/v (B, Hk, Skv, dh) -> (B, H, Sq, dh).
+
+    H % Hk == 0; kv heads are shared across each group of H//Hk query
+    heads through the index maps (no repeat/materialization).
 
     ``interpret=None`` auto-detects (compiled on TPU, interpreter off-TPU).
     Caller pads Sq % tq == 0 and Skv % tk == 0 (ops.py wrapper)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    BH, Sq, dh = q.shape
-    Skv = k.shape[1]
+    B, H, Sq, dh = q.shape
+    Hk, Skv = k.shape[1], k.shape[2]
+    assert H % Hk == 0, (H, Hk)
+    g = H // Hk  # query heads per kv head
     assert Sq % tq == 0 and Skv % tk == 0, (Sq, Skv, tq, tk)
     scale = dh**-0.5
     kern = functools.partial(_kernel, tq=tq, tk=tk, causal=causal,
                              window=window, softcap=softcap, scale=scale)
     return pl.pallas_call(
         kern,
-        grid=(BH, Sq // tq),
+        grid=(B, H, Sq // tq),
         in_specs=[
-            pl.BlockSpec((1, tq, dh), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, Skv, dh), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, Skv, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, tq, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, dh), lambda b, h, i: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, dh), lambda b, h, i: (b, h // g, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, tq, dh), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, tq, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
         interpret=interpret,
     )(q, k, v)

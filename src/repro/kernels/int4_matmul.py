@@ -3,12 +3,17 @@ current-TPU* baseline the paper's proposal competes against (DESIGN.md §2.C).
 
 Weights are stored truly packed (2 codes/byte).  Per grid step the kernel
 unpacks a (TM, TK) weight tile in VMEM with bit ops, applies the §3.3
-row-block scales, and feeds the MXU with a dense (TM, TK)·(TK, TB) dot,
-accumulating over k tiles.  This is the standard int4 weight-only-quant
-GeMM shape used in production TPU serving stacks.
+row-block scales, and feeds the MXU with a dense (TM, TK)·(TK, TB) dot.
+This is the standard int4 weight-only-quant GeMM shape used in production
+TPU serving stacks.
 
-Grid = (b_tiles, m_tiles, k_tiles), k innermost for output accumulation.
-Requires tk % scale_block == 0 so each k tile covers whole scale blocks.
+Grid = (b_tiles, m_tiles, k_tiles), k innermost.  The default path
+(``acc_in_vmem=True``) accumulates over k in a VMEM scratch buffer and
+stores to HBM exactly once per output block, executing the fused epilogue
+(bias/act/residual/cast — core.epilogue.Epilogue) on the accumulator just
+before that single store.  ``acc_in_vmem=False`` keeps the pre-overhaul
+``y_ref +=`` formulation as the microbench baseline.  Requires
+tk % scale_block == 0 so each k tile covers whole scale blocks.
 """
 
 from __future__ import annotations
@@ -18,39 +23,82 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.epilogue import Epilogue
 
 
-def _kernel(u8_ref, scale_ref, x_ref, y_ref, *, tk: int, scale_block: int,
-            acc_dtype):
-    kstep = pl.program_id(2)
-
-    @pl.when(kstep == 0)
-    def _init():
-        y_ref[...] = jnp.zeros_like(y_ref)
-
+def _dequant_dot(u8_ref, scale_ref, x_ref, *, tk: int, scale_block: int,
+                 acc_dtype):
+    """Unpack + §3.3 scales + one MXU dot for the current (TM, TK) tile —
+    shared by the fused and legacy kernels (bit-identical per k-step)."""
     packed = u8_ref[...]  # (TM, TK//2) uint8, two codes per byte
     hi = (packed >> 4) & 0xF
     lo = packed & 0xF
     codes = jnp.stack([hi, lo], axis=-1).reshape(packed.shape[0], tk)
     c = codes.astype(jnp.int32)
     vals = jnp.where(c <= 7, c, c - 16).astype(acc_dtype)  # b() map, §3.1
-    # §3.3 row-block scales
     q = scale_ref[...].astype(acc_dtype)  # (TM, TK // scale_block)
     w = (vals.reshape(packed.shape[0], tk // scale_block, scale_block)
          * q[..., None]).reshape(packed.shape[0], tk)
     x = x_ref[...].astype(acc_dtype)  # (TK, TB)
-    y_ref[...] += jax.lax.dot(w, x, preferred_element_type=acc_dtype).astype(
-        y_ref.dtype)
+    return jax.lax.dot(w, x, preferred_element_type=acc_dtype)
+
+
+def _kernel_fused(u8_ref, scale_ref, x_ref, *rest, tk: int, scale_block: int,
+                  acc_dtype, nk: int, epilogue: Epilogue, has_bias: bool,
+                  has_res: bool):
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    res_ref = refs.pop(0) if has_res else None
+    y_ref, acc_ref = refs
+    kstep = pl.program_id(2)
+    part = _dequant_dot(u8_ref, scale_ref, x_ref, tk=tk,
+                        scale_block=scale_block, acc_dtype=acc_dtype)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(kstep > 0)
+    def _accum():
+        acc_ref[...] += part
+
+    @pl.when(kstep == nk - 1)
+    def _writeback():
+        total = acc_ref[...]
+        if has_bias:
+            total = total + bias_ref[...].astype(acc_dtype)
+        total = epilogue.act_fn()(total)
+        if has_res:
+            total = total + res_ref[...].astype(acc_dtype)
+        y_ref[...] = total.astype(y_ref.dtype)
+
+
+def _kernel_legacy(u8_ref, scale_ref, x_ref, y_ref, *, tk: int,
+                   scale_block: int, acc_dtype):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    part = _dequant_dot(u8_ref, scale_ref, x_ref, tk=tk,
+                        scale_block=scale_block, acc_dtype=acc_dtype)
+    y_ref[...] += part.astype(y_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale_block", "tm", "tk", "tb", "interpret", "acc_dtype"),
+    static_argnames=("scale_block", "tm", "tk", "tb", "interpret",
+                     "acc_dtype", "acc_in_vmem", "epilogue"),
 )
 def int4_matmul_pallas(
     u8: jnp.ndarray,       # (m, k//2) packed codes
     scales: jnp.ndarray,   # (m, k // scale_block)
     x: jnp.ndarray,        # (k, b)
+    bias: jnp.ndarray | None = None,      # (m, 1) when epilogue.bias
+    residual: jnp.ndarray | None = None,  # (m, b) when epilogue.residual
     *,
     scale_block: int,
     tm: int = 256,
@@ -58,9 +106,12 @@ def int4_matmul_pallas(
     tb: int = 128,
     interpret: bool | None = None,
     acc_dtype=jnp.float32,
+    acc_in_vmem: bool = True,
+    epilogue: Epilogue | None = None,
 ) -> jnp.ndarray:
     if interpret is None:  # auto-detect: compiled on TPU, interpreter off-TPU
         interpret = jax.default_backend() != "tpu"
+    ep = epilogue or Epilogue()
     m, k2 = u8.shape
     k, b = x.shape
     assert k == k2 * 2
@@ -69,19 +120,54 @@ def int4_matmul_pallas(
     assert tk % scale_block == 0 and tk % 2 == 0
     assert m % tm == 0 and k % tk == 0 and b % tb == 0, (m, k, b, tm, tk, tb)
     sk = tk // scale_block
+    out_dtype = jnp.dtype(ep.out_dtype) if ep.out_dtype else jnp.dtype(
+        acc_dtype)
 
     grid = (b // tb, m // tm, k // tk)
+    if not acc_in_vmem:
+        assert ep.is_identity, \
+            "the legacy path has no fused epilogue (ops.py applies it unfused)"
+        kern = functools.partial(
+            _kernel_legacy, tk=tk, scale_block=scale_block,
+            acc_dtype=acc_dtype)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, tk // 2), lambda ib, im, ik: (im, ik)),
+                pl.BlockSpec((tm, sk), lambda ib, im, ik: (im, ik)),
+                pl.BlockSpec((tk, tb), lambda ib, im, ik: (ik, ib)),
+            ],
+            out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ik: (im, ib)),
+            out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
+            interpret=interpret,
+        )(u8, scales, x)
+
+    has_bias, has_res = ep.bias, ep.residual
+    in_specs = [
+        pl.BlockSpec((tm, tk // 2), lambda ib, im, ik: (im, ik)),
+        pl.BlockSpec((tm, sk), lambda ib, im, ik: (im, ik)),
+        pl.BlockSpec((tk, tb), lambda ib, im, ik: (ik, ib)),
+    ]
+    operands = [u8, scales, x]
+    if has_bias:
+        assert bias is not None and bias.shape == (m, 1), (m, bias)
+        in_specs.append(pl.BlockSpec((tm, 1), lambda ib, im, ik: (im, 0)))
+        operands.append(bias)
+    if has_res:
+        assert residual is not None and residual.shape == (m, b), \
+            (m, b, residual)
+        in_specs.append(pl.BlockSpec((tm, tb), lambda ib, im, ik: (im, ib)))
+        operands.append(residual)
     kern = functools.partial(
-        _kernel, tk=tk, scale_block=scale_block, acc_dtype=acc_dtype)
+        _kernel_fused, tk=tk, scale_block=scale_block, acc_dtype=acc_dtype,
+        nk=k // tk, epilogue=ep, has_bias=has_bias, has_res=has_res)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tk // 2), lambda ib, im, ik: (im, ik)),
-            pl.BlockSpec((tm, sk), lambda ib, im, ik: (im, ik)),
-            pl.BlockSpec((tk, tb), lambda ib, im, ik: (ik, ib)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ik: (im, ib)),
-        out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
+        out_shape=jax.ShapeDtypeStruct((m, b), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tb), jnp.dtype(acc_dtype))],
         interpret=interpret,
-    )(u8, scales, x)
+    )(*operands)

@@ -1,28 +1,41 @@
-"""Fused msGeMM Pallas TPU kernel — produce + consume with a VMEM-resident LUT.
+"""Fused msGeMM Pallas TPU kernel — amortized produce, VMEM-resident
+accumulation, and a fused epilogue.
 
-TPU adaptation of the paper's proposed "LUT-add unit" (paper §6, DESIGN.md
-§2.B).  Per grid step the kernel:
+TPU adaptation of the paper's proposed "LUT-add unit" (paper §4-§6,
+DESIGN.md §2.B).  The performance-first formulation keeps both halves of
+the paper's argument true on the actual grid:
 
-1. *produce*: builds the LUT tile for TJ consecutive j-chunks directly in
-   VMEM via one small MXU dot  ``basis (16^d, d) · x_chunk (d, TJ·TB)``
-   — phase 1 at MXU rate, the TPU analogue of the paper's Tensor-Core
-   produce phase;
-2. *consume*: for each chunk, a vector gather from the VMEM LUT tile using
-   the packed 4·d-bit row codes as indices (zero index arithmetic, §4),
-   accumulating into the output block — phase 2 on the VPU/scalar path,
-   which is exactly the unit the paper says must be strengthened.
+* **produce is amortized over m** (§6): grid = (b_tiles, j_tiles,
+  m_tiles) with **m innermost**.  The LUT tile for a (b, j) cell is built
+  by one small MXU dot ``basis (16^d, d) · x_chunk (d, TJ·TB)`` into a
+  VMEM scratch buffer on the *first* m-step only — every other m-tile
+  gathers from the already-resident scratch.  Produce cost per output
+  column drops by the number of m-tiles (the per-shape amortization
+  factor reported by benchmarks/kernel_microbench.py).
+* **consume never leaves fast memory** (§4): the output accumulates in a
+  VMEM scratch stripe ``(mp, TB)`` that stays resident across the whole
+  j-reduction; HBM sees exactly one writeback per (b-stripe, m-tile), on
+  the last j-step — not one read-modify-write per j-step.
+* **the epilogue rides the final writeback**: bias add, activation
+  (relu/gelu/silu), residual add, and the output-dtype cast execute on
+  the VMEM accumulator just before the single store, so callers stop
+  issuing separate element-wise HBM passes after the GeMM
+  (core/epilogue.Epilogue; EmuGEMM's fusion argument in PAPERS.md).
 
-Grid = (b_tiles, m_tiles, j_tiles) with j innermost so the output block
-accumulates across j steps (classic Pallas accumulation pattern).  Shared
-scales (§3.3) are applied in the *factored* form: one multiply per scale
-block after the block's chunks are summed, requiring TJ·d ≡ 0
+Shared scales (§3.3) are applied in the *factored* form: one multiply per
+scale block after the block's chunks are summed, requiring TJ·d ≡ 0
 (mod scale_block) — enforced by ops.py.
 
-VMEM budget per step ≈ 16^d·TJ·TB·4 bytes for the LUT tile (d=3, TJ=12,
-TB=128 → 25 MB; ops.py sizes tiles to stay within ~8 MB by default).
+VMEM budget per step ≈ 16^d·TJ·TB·4 bytes for the LUT tile plus
+(mp·TB·4) for the f32 accumulator stripe and (mp·TB·out_bytes) for the
+resident output block; ops.py sizes TB/TJ to keep the LUT within
+~8 MB and the stripes within ~4 MB (see README §Kernel performance).
 
-Validated bit-exactly against kernels/ref.py in interpret mode
-(tests/test_kernels.py sweeps shapes, dtypes, d, and tile sizes).
+The pre-overhaul formulation (j innermost, ``y_ref +=`` per step,
+produce re-run on every m-tile) is kept behind ``acc_in_vmem=False`` as
+the comparison baseline for the microbench and as an autotuner
+candidate; with the identity epilogue the two paths are bit-identical
+(same op order per output element — asserted in tests/test_kernels.py).
 """
 
 from __future__ import annotations
@@ -32,31 +45,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import lut as lut_mod
+from repro.core.epilogue import Epilogue
 
 
-def _kernel(idx_ref, x_ref, basis_ref, scale_ref, y_ref, *, d: int,
-            tj: int, scale_block: int, acc_dtype):
-    """One (b_tile, m_tile, j_tile) grid step."""
-    jstep = pl.program_id(2)
-
-    @pl.when(jstep == 0)
-    def _init():
-        y_ref[...] = jnp.zeros_like(y_ref)
-
-    # ---- produce: LUT tile in VMEM via one MXU dot ------------------------
-    # x block: (TJ*d, TB) -> chunks (TJ, d, TB); basis: (16^d, d)
-    tb = x_ref.shape[-1]
-    x_chunks = x_ref[...].reshape(tj, d, tb).astype(acc_dtype)
-    basis = basis_ref[...].astype(acc_dtype)  # (N, d)
-    # lut[n, j, b] = sum_r basis[n, r] * x_chunks[j, r, b]
-    lut = jax.lax.dot_general(
-        basis, x_chunks, (((1,), (1,)), ((), ())),
-        preferred_element_type=acc_dtype)  # (N, TJ, TB)
-
-    # ---- consume: gather-add from the VMEM LUT (paper Eq. 5) -------------
-    idx = idx_ref[...]  # (TM, TJ) packed 4d-bit codes == LUT row ids
+def _consume_tile(lut, idx, scale_ref, *, d: int, tj: int, scale_block: int,
+                  tb: int, acc_dtype):
+    """Gather-add one (TM, TJ) index tile against a (N, TJ, TB) LUT tile,
+    §3.3 factored scales — shared by the fused and legacy kernels so the
+    two paths stay bit-identical per j-step."""
     cpb = scale_block // d  # chunks per scale block
     acc = jnp.zeros((idx.shape[0], tb), acc_dtype)
     for blk in range(tj // cpb):
@@ -66,19 +65,92 @@ def _kernel(idx_ref, x_ref, basis_ref, scale_ref, y_ref, *, d: int,
             part = part + jnp.take(lut[:, tjc, :], idx[:, tjc], axis=0)
         # §3.3 factored scale: one multiply per bounding box
         acc = acc + part * scale_ref[:, blk][:, None].astype(acc_dtype)
+    return acc
+
+
+def _kernel_fused(idx_ref, x_ref, basis_ref, scale_ref, *rest, d: int,
+                  tm: int, tj: int, scale_block: int, acc_dtype, nj: int,
+                  epilogue: Epilogue, has_bias: bool, has_res: bool):
+    """One (b_tile, j_tile, m_tile) grid step — m innermost."""
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    res_ref = refs.pop(0) if has_res else None
+    y_ref, lut_ref, acc_ref = refs
+    ij, im = pl.program_id(1), pl.program_id(2)
+
+    # ---- produce: once per (b, j), amortized over every m-tile ----------
+    @pl.when(im == 0)
+    def _produce():
+        tb = x_ref.shape[-1]
+        x_chunks = x_ref[...].reshape(tj, d, tb).astype(acc_dtype)
+        basis = basis_ref[...].astype(acc_dtype)  # (N, d)
+        # lut[n, j, b] = sum_r basis[n, r] * x_chunks[j, r, b]
+        lut_ref[...] = jax.lax.dot_general(
+            basis, x_chunks, (((1,), (1,)), ((), ())),
+            preferred_element_type=acc_dtype)  # (N, TJ, TB)
+
+    # ---- consume: gather-add from the resident LUT (paper Eq. 5) -------
+    tb = y_ref.shape[-1]
+    acc = _consume_tile(lut_ref[...], idx_ref[...], scale_ref, d=d, tj=tj,
+                        scale_block=scale_block, tb=tb, acc_dtype=acc_dtype)
+
+    # ---- accumulate in the VMEM stripe; HBM sees only the final store --
+    rows = pl.dslice(im * tm, tm)
+
+    @pl.when(ij == 0)
+    def _init():
+        acc_ref[rows, :] = acc
+
+    @pl.when(ij > 0)
+    def _accum():
+        acc_ref[rows, :] += acc
+
+    @pl.when(ij == nj - 1)
+    def _writeback():
+        total = acc_ref[rows, :]
+        if has_bias:
+            total = total + bias_ref[rows, :].astype(acc_dtype)
+        total = epilogue.act_fn()(total)
+        if has_res:
+            total = total + res_ref[rows, :].astype(acc_dtype)
+        y_ref[rows, :] = total.astype(y_ref.dtype)
+
+
+def _kernel_legacy(idx_ref, x_ref, basis_ref, scale_ref, y_ref, *, d: int,
+                   tj: int, scale_block: int, acc_dtype):
+    """Pre-overhaul step — grid (b, m, j) with j innermost: the produce
+    dot re-runs on every (b, m, j) step and the output block accumulates
+    via ``y_ref +=``.  Kept as the microbench baseline and as an
+    autotuner candidate (ExecPlan.acc_in_vmem=False)."""
+    jstep = pl.program_id(2)
+
+    @pl.when(jstep == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    tb = x_ref.shape[-1]
+    x_chunks = x_ref[...].reshape(tj, d, tb).astype(acc_dtype)
+    basis = basis_ref[...].astype(acc_dtype)  # (N, d)
+    lut = jax.lax.dot_general(
+        basis, x_chunks, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)  # (N, TJ, TB)
+    acc = _consume_tile(lut, idx_ref[...], scale_ref, d=d, tj=tj,
+                        scale_block=scale_block, tb=tb, acc_dtype=acc_dtype)
     y_ref[...] += acc.astype(y_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("d", "scale_block", "tm", "tj", "tb", "interpret",
-                     "acc_dtype"),
+                     "acc_dtype", "acc_in_vmem", "epilogue"),
 )
 def msgemm_pallas(
     idx: jnp.ndarray,      # (m, kc) int32 packed LUT indices
     x: jnp.ndarray,        # (k_pad = kc*d, b)
     scales: jnp.ndarray,   # (m, kc*d // scale_block)
     codebook: jnp.ndarray | None = None,  # optional (16,) value table
+    bias: jnp.ndarray | None = None,      # (m, 1) when epilogue.bias
+    residual: jnp.ndarray | None = None,  # (m, b) when epilogue.residual
     *,
     d: int,
     scale_block: int,
@@ -87,23 +159,36 @@ def msgemm_pallas(
     tb: int = 128,
     interpret: bool | None = None,
     acc_dtype=jnp.float32,
+    acc_in_vmem: bool = True,
+    epilogue: Epilogue | None = None,
 ) -> jnp.ndarray:
-    """y (m, b) = dequant(codes) @ x via the fused produce+consume kernel.
+    """y (m, b) = epilogue(dequant(codes) @ x) via the fused kernel.
 
     ``codebook`` swaps the uniform int4 tuple basis for a learned 16-entry
-    one (repro.calib) — the kernel body is untouched: the basis matrix is
-    already an operand, so non-uniform codebooks are literally zero extra
-    kernel cost (the issue's point about Eq. 5 never requiring the uniform
-    grid).  ``codebook[0]`` must be 0 (padding rows/chunks use index 0).
+    one (repro.calib) — the basis matrix is already an operand, so
+    non-uniform codebooks are zero extra kernel cost.  ``codebook[0]``
+    must be 0 (padding rows/chunks use index 0).
+
+    ``acc_in_vmem=True`` (default) runs the reordered grid — m innermost,
+    LUT produced once per (b, j) into VMEM scratch, output accumulated in
+    a VMEM stripe with one HBM writeback on the last j-step.  ``False``
+    selects the legacy j-innermost formulation (baseline; no fused
+    epilogue — callers apply it unfused).
+
+    ``epilogue`` (a hashable core.epilogue.Epilogue) executes inside the
+    final writeback: ``y = act(acc + bias) + residual`` cast to
+    ``epilogue.out_dtype``.  With the identity epilogue the output is
+    bit-identical to the legacy path.
 
     ``interpret=None`` auto-detects: compiled on TPU, interpreter
     elsewhere (CPU/GPU have no Mosaic lowering for this kernel).
 
     Caller (ops.py) guarantees: m % tm == 0, kc % tj == 0, b % tb == 0,
-    tj*d % scale_block == 0.
+    tj*d % scale_block == 0, bias (m, 1) / residual (m, b) pre-padded.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    ep = epilogue or Epilogue()
     m, kc = idx.shape
     k, b = x.shape
     assert k == kc * d, (k, kc, d)
@@ -114,20 +199,65 @@ def msgemm_pallas(
     sj = tj * d // scale_block
     basis = lut_mod.tuple_basis(d, dtype=acc_dtype, codebook=codebook)
     n = basis.shape[0]
+    out_dtype = jnp.dtype(ep.out_dtype) if ep.out_dtype else jnp.dtype(
+        acc_dtype)
 
-    grid = (b // tb, m // tm, kc // tj)
+    if not acc_in_vmem:
+        assert ep.is_identity, \
+            "the legacy path has no fused epilogue (ops.py applies it unfused)"
+        grid = (b // tb, m // tm, kc // tj)
+        kern = functools.partial(
+            _kernel_legacy, d=d, tj=tj, scale_block=scale_block,
+            acc_dtype=acc_dtype)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, tj), lambda ib, im, ij: (im, ij)),      # idx
+                pl.BlockSpec((tj * d, tb), lambda ib, im, ij: (ij, ib)),  # x
+                pl.BlockSpec((n, d), lambda ib, im, ij: (0, 0)),          # basis
+                pl.BlockSpec((tm, sj), lambda ib, im, ij: (im, ij)),      # scales
+            ],
+            out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ij: (im, ib)),
+            out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
+            interpret=interpret,
+        )(idx, x, basis, scales)
+
+    has_bias, has_res = ep.bias, ep.residual
+    nj = kc // tj
+    grid = (b // tb, nj, m // tm)
+    # the y stripe and the epilogue operands ignore ij/im in their index
+    # maps -> the blocks stay VMEM-resident for a whole b-stripe and are
+    # fetched/written exactly once per (b-stripe)
+    in_specs = [
+        pl.BlockSpec((tm, tj), lambda ib, ij, im: (im, ij)),       # idx
+        pl.BlockSpec((tj * d, tb), lambda ib, ij, im: (ij, ib)),   # x
+        pl.BlockSpec((n, d), lambda ib, ij, im: (0, 0)),           # basis
+        pl.BlockSpec((tm, sj), lambda ib, ij, im: (im, ij)),       # scales
+    ]
+    operands = [idx, x, basis, scales]
+    if has_bias:
+        assert bias is not None and bias.shape == (m, 1), (m, bias)
+        in_specs.append(pl.BlockSpec((m, 1), lambda ib, ij, im: (0, 0)))
+        operands.append(bias)
+    if has_res:
+        assert residual is not None and residual.shape == (m, b), \
+            (m, b, residual)
+        in_specs.append(pl.BlockSpec((m, tb), lambda ib, ij, im: (0, ib)))
+        operands.append(residual)
     kern = functools.partial(
-        _kernel, d=d, tj=tj, scale_block=scale_block, acc_dtype=acc_dtype)
+        _kernel_fused, d=d, tm=tm, tj=tj, scale_block=scale_block,
+        acc_dtype=acc_dtype, nj=nj, epilogue=ep, has_bias=has_bias,
+        has_res=has_res)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tj), lambda ib, im, ij: (im, ij)),       # idx
-            pl.BlockSpec((tj * d, tb), lambda ib, im, ij: (ij, ib)),   # x
-            pl.BlockSpec((n, d), lambda ib, im, ij: (0, 0)),           # basis
-            pl.BlockSpec((tm, sj), lambda ib, im, ij: (im, ij)),       # scales
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m, tb), lambda ib, ij, im: (0, ib)),
+        out_shape=jax.ShapeDtypeStruct((m, b), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n, tj, tb), jnp.dtype(acc_dtype)),  # LUT tile
+            pltpu.VMEM((m, tb), jnp.dtype(acc_dtype)),      # acc stripe
         ],
-        out_specs=pl.BlockSpec((tm, tb), lambda ib, im, ij: (im, ib)),
-        out_shape=jax.ShapeDtypeStruct((m, b), acc_dtype),
         interpret=interpret,
-    )(idx, x, basis, scales)
+    )(*operands)

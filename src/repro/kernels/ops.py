@@ -1,8 +1,21 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handles tile-size selection (VMEM budgeting), padding to tile multiples,
-backend detection (interpret=True off-TPU), and the quantized-param
-plumbing used by core.linear's ``impl='pallas'`` path.
+backend detection (interpret=True off-TPU), epilogue padding/layout, and
+the quantized-param plumbing used by the dispatch backends.
+
+VMEM budget math (README §Kernel performance): the fused msgemm kernel
+holds, per core,
+
+* the LUT tile           16^d · TJ · TB · 4 B   (≤ ``VMEM_BUDGET``)
+* the f32 acc stripe     mp · TB · 4 B          (≤ ``ACC_BUDGET`` together
+* the resident out block mp · TB · out_bytes     with the out stripe)
+
+plus the small idx/x/scale blocks.  ``_pick_tiles`` first sizes TB to the
+batch (decode: TB == round_up(b, 8), *not* padded to 128 — small-batch
+decode shapes get narrow stripes and the freed LUT budget lets TJ grow),
+shrinks TB if the acc stripe would blow ``ACC_BUDGET``, then grows TJ
+while the LUT tile stays within ``VMEM_BUDGET``.
 """
 
 from __future__ import annotations
@@ -11,10 +24,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.epilogue import Epilogue
 from repro.kernels import int4_matmul as _i4
 from repro.kernels import msgemm as _ms
 
 VMEM_BUDGET = 8 * 1024 * 1024  # conservative per-step LUT budget (bytes)
+ACC_BUDGET = 4 * 1024 * 1024   # acc + out stripe budget (bytes)
+DECODE_BATCH = 32  # b <= this is treated as a decode shape (tall-skinny)
 
 
 def _interpret() -> bool:
@@ -25,7 +41,8 @@ def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
-def _pick_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
+def _pick_tiles(m: int, kc: int, b: int, d: int, scale_block: int,
+                out_bytes: int = 4, residual: bool = False):
     """Pick (tm, tj, tb) fitting the 16^d LUT tile in the VMEM budget.
 
     tj must stay a multiple of scale_block // d (factored-scale tiling,
@@ -35,18 +52,49 @@ def _pick_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
     non-divisor tile, silently padding dead columns the kernel then
     gathered for nothing (e.g. kc=86, cpb=12 grew tj to 96 -> 10 dead
     chunk columns per row).
+
+    tb is sized to the actual batch (decode: round_up(b, 8), never padded
+    to 128) and shrunk while the fused kernel's VMEM acc+out stripe
+    (mp·tb·8 B) exceeds ACC_BUDGET.  Decode shapes (b <= DECODE_BATCH)
+    take tm up to 512: more rows per gather step against the same
+    resident LUT tile.
     """
     n = 16**d
     cpb = scale_block // d
     tb = min(128, _round_up(b, 8))
+    tm_cap = 512 if b <= DECODE_BATCH else 256
+    tm = min(tm_cap, _round_up(m, 8))
+    # acc stripe (f32 acc + f32 out ~ 8 B/elem) must stay within budget —
+    # but only shrink tb when some tb can actually satisfy it; if even the
+    # tb floor cannot (vocab-sized m), the shape runs the legacy kernel
+    # (no stripe) and a batch-wide tb is the right choice there
+    # out_bytes/residual let ops.msgemm shrink for the stripes the fused
+    # call will actually keep resident (the planner, which cannot know
+    # the per-call epilogue, budgets the plain acc+out stripes)
+    if acc_stripe_fits(m, tm, 8, out_bytes, residual):
+        while tb > 8 and not acc_stripe_fits(m, tm, tb, out_bytes, residual):
+            tb = max(8, _round_up(tb // 2, 8))
     tj = cpb
     # grow tj while the LUT tile (n * tj * tb * 4B) stays in budget and
     # the doubled tile still tiles kc exactly (tj <= kc, kc % tj == 0)
     while (n * tj * 2 * tb * 4 <= VMEM_BUDGET
            and tj * 2 <= kc and kc % (tj * 2) == 0):
         tj *= 2
-    tm = min(256, _round_up(m, 8))
     return tm, tj, tb
+
+
+def acc_stripe_fits(m: int, tm: int, tb: int, out_bytes: int = 4,
+                    residual: bool = False) -> bool:
+    """Can the fused kernel's VMEM-resident stripes for this shape stay
+    within (2x of) ACC_BUDGET?  Counts the f32 acc scratch, the resident
+    out block, and — when a residual is fused — the residual operand's
+    resident (mp, tb) block.  Beyond that — e.g. a vocab-sized lm-head m
+    at the tb floor — ops.msgemm falls back to the legacy j-innermost
+    accumulation (no stripes) rather than asking Mosaic for an
+    unbuildable allocation."""
+    mp = _round_up(m, tm)
+    per_elem = 4 + out_bytes + (4 if residual else 0)
+    return mp * tb * per_elem <= 2 * ACC_BUDGET
 
 
 def msgemm_tiles(m: int, kc: int, b: int, d: int, scale_block: int):
@@ -65,34 +113,72 @@ def int4_tiles(m: int, k: int, b: int, scale_block: int):
     return tm, tk, tb
 
 
+def _epilogue_cols(y: jnp.ndarray, ep: Epilogue | None,
+                   bias: jnp.ndarray | None,
+                   residual: jnp.ndarray | None) -> jnp.ndarray:
+    """Unfused epilogue in the kernels' (m, b) column layout — the exact
+    op order of the fused writeback, for acc_in_vmem=False / jnp paths."""
+    if ep is None or ep.is_identity:
+        return y
+    if ep.bias:
+        y = y + bias[:, None].astype(y.dtype)
+    y = ep.act_fn()(y)
+    if ep.residual:
+        y = y + residual.astype(y.dtype)
+    if ep.out_dtype is not None:
+        y = y.astype(ep.out_dtype)
+    return y
+
+
 def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
            scales: jnp.ndarray | None = None, scale_block: int = 36,
            codebook: jnp.ndarray | None = None,
            interpret: bool | None = None,
            tm: int | None = None, tj: int | None = None,
-           tb: int | None = None) -> jnp.ndarray:
-    """y (m, b) = dequant(codes (m,k)) @ x (k, b) via the fused kernel.
+           tb: int | None = None,
+           acc_dtype=jnp.float32, acc_in_vmem: bool = True,
+           epilogue: Epilogue | None = None,
+           bias: jnp.ndarray | None = None,
+           residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y (m, b) = epilogue(dequant(codes (m,k)) @ x (k, b)) via the kernel.
 
     Pads every dim to tile multiples; zero code rows/cols contribute 0
     (codebooks pin value 0 at code 0, so this holds for learned tables
     too).  ``codebook``: optional (16,) non-uniform value table.
 
     ``tm/tj/tb``: explicit tile sizes from a dispatch ExecPlan (the
-    autotuner's winners); None falls back to the heuristic.  tj must be
-    a multiple of scale_block // d (§3.3 factored-scale tiling).
+    autotuner's winners); None falls back to the heuristic, which is only
+    computed when at least one tile is missing (an ExecPlan that names
+    all three skips the pick entirely).  tj must be a multiple of
+    scale_block // d (§3.3 factored-scale tiling).
+
+    ``epilogue``: a core.epilogue.Epilogue fused into the kernel's final
+    VMEM writeback (``acc_in_vmem=True``); the legacy path
+    (``acc_in_vmem=False``) applies it unfused after the kernel, same op
+    order.  ``bias`` is (m,), ``residual`` is (m, b) column layout.
     """
+    ep = epilogue or Epilogue()
     m, k = codes.shape
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
+        if residual is not None and residual.ndim == 1:
+            residual = residual[:, None]
     b = x.shape[1]
     if scales is None:
         scales = jnp.ones((m, -(-k // scale_block)), jnp.float32)
     idx = packing.pack_indices(codes, d)
     kc = idx.shape[1]
 
-    htm, htj, htb = _pick_tiles(m, kc, b, d, scale_block)
-    tm, tj, tb = tm or htm, tj or htj, tb or htb
+    out_bytes = jnp.dtype(ep.out_dtype or jnp.float32).itemsize
+    if tm is None or tj is None or tb is None:
+        htm, htj, htb = _pick_tiles(
+            m, kc, b, d, scale_block, out_bytes,
+            residual=acc_in_vmem and ep.residual)
+        tm, tj, tb = tm or htm, tj or htj, tb or htb
+    if acc_in_vmem and not acc_stripe_fits(
+            m, tm, tb, out_bytes, residual=ep.residual):
+        acc_in_vmem = False  # stripes would blow VMEM — legacy accumulation
     mp, kcp, bp = _round_up(m, tm), _round_up(kc, tj), _round_up(b, tb)
     sj = kcp * d // scale_block
     idx_p = jnp.pad(idx, ((0, mp - m), (0, kcp - kc)))
@@ -100,38 +186,75 @@ def msgemm(codes: jnp.ndarray, x: jnp.ndarray, d: int, *,
                   ((0, kcp * d - x.shape[0]), (0, bp - b)))
     sc_p = jnp.pad(scales.astype(jnp.float32),
                    ((0, mp - m), (0, sj - scales.shape[1])))
+    interpret = _interpret() if interpret is None else interpret
+
+    fuse = acc_in_vmem and not ep.is_identity
+    bias_p = res_p = None
+    if fuse:
+        if ep.bias:
+            bias_p = jnp.pad(bias.astype(jnp.float32)[:, None],
+                             ((0, mp - m), (0, 0)))
+        if ep.residual:
+            res_p = jnp.pad(residual.astype(jnp.float32),
+                            ((0, mp - m), (0, bp - b)))
     y = _ms.msgemm_pallas(
-        idx_p, x_p, sc_p, codebook, d=d, scale_block=scale_block,
-        tm=tm, tj=tj, tb=tb,
-        interpret=_interpret() if interpret is None else interpret)
+        idx_p, x_p, sc_p, codebook, bias_p, res_p, d=d,
+        scale_block=scale_block, tm=tm, tj=tj, tb=tb, interpret=interpret,
+        acc_dtype=acc_dtype, acc_in_vmem=acc_in_vmem,
+        epilogue=ep if fuse else None)
     y = y[:m, :b]
+    if not fuse:
+        y = _epilogue_cols(y, ep, bias, residual)
     return y[:, 0] if squeeze else y
 
 
 def int4_matmul(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
                 scale_block: int = 32, interpret: bool | None = None,
                 tm: int | None = None, tk: int | None = None,
-                tb: int | None = None) -> jnp.ndarray:
-    """y = dequant(packed u8 (m, k/2)) @ x (k, b) via the dequant kernel.
+                tb: int | None = None,
+                acc_dtype=jnp.float32, acc_in_vmem: bool = True,
+                epilogue: Epilogue | None = None,
+                bias: jnp.ndarray | None = None,
+                residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y = epilogue(dequant(packed u8 (m, k/2)) @ x (k, b)) via the kernel.
 
-    ``tm/tk/tb``: explicit tiles from a dispatch ExecPlan; None falls
-    back to the heuristic (tk must be even and % scale_block == 0)."""
+    ``tm/tk/tb``: explicit tiles from a dispatch ExecPlan; the heuristic
+    only runs when one is missing (tk must be even and % scale_block ==
+    0).  Epilogue semantics match :func:`msgemm`."""
+    ep = epilogue or Epilogue()
     m = u8.shape[0]
     squeeze = x.ndim == 1
     if squeeze:
         x = x[:, None]
+        if residual is not None and residual.ndim == 1:
+            residual = residual[:, None]
     k, b = x.shape
-    htm, htk, htb = int4_tiles(m, k, b, scale_block)
-    tm, tk, tb = tm or htm, tk or htk, tb or htb
+    if tm is None or tk is None or tb is None:
+        htm, htk, htb = int4_tiles(m, k, b, scale_block)
+        tm, tk, tb = tm or htm, tk or htk, tb or htb
     mp, kp, bp = _round_up(m, tm), _round_up(k, tk), _round_up(b, tb)
     u8_p = jnp.pad(u8, ((0, mp - m), (0, kp // 2 - u8.shape[1])))
     sc_p = jnp.pad(scales.astype(jnp.float32),
                    ((0, mp - m), (0, kp // scale_block - scales.shape[1])))
     x_p = jnp.pad(x.astype(jnp.float32), ((0, kp - k), (0, bp - b)))
+    interpret = _interpret() if interpret is None else interpret
+
+    fuse = acc_in_vmem and not ep.is_identity
+    bias_p = res_p = None
+    if fuse:
+        if ep.bias:
+            bias_p = jnp.pad(bias.astype(jnp.float32)[:, None],
+                             ((0, mp - m), (0, 0)))
+        if ep.residual:
+            res_p = jnp.pad(residual.astype(jnp.float32),
+                            ((0, mp - m), (0, bp - b)))
     y = _i4.int4_matmul_pallas(
-        u8_p, sc_p, x_p, scale_block=scale_block, tm=tm, tk=tk, tb=tb,
-        interpret=_interpret() if interpret is None else interpret)
+        u8_p, sc_p, x_p, bias_p, res_p, scale_block=scale_block,
+        tm=tm, tk=tk, tb=tb, interpret=interpret, acc_dtype=acc_dtype,
+        acc_in_vmem=acc_in_vmem, epilogue=ep if fuse else None)
     y = y[:m, :b]
+    if not fuse:
+        y = _epilogue_cols(y, ep, bias, residual)
     return y[:, 0] if squeeze else y
 
 
@@ -139,28 +262,28 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                     interpret=None):
     """Multi-head attention via the flash kernel.
 
-    q (B, Sq, H, dh), k/v (B, Skv, Hk, dh) with H % Hk == 0 (GQA kv heads
-    broadcast).  Pads sequence dims to tile multiples (masked out)."""
+    q (B, Sq, H, dh), k/v (B, Skv, Hk, dh) with H % Hk == 0.  GQA kv
+    heads are NOT materialized: the kernel's k/v index maps divide the
+    query-head grid index by the group size, so each kv head's (Skv, dh)
+    block is fetched from HBM once per group instead of being expanded
+    H//Hk-fold by ``jnp.repeat`` first.  Pads sequence dims to tile
+    multiples (masked out)."""
     from repro.kernels import flash_attention as _fa
 
     B, Sq, H, dh = q.shape
     Skv, Hk = k.shape[1], k.shape[2]
-    if Hk != H:  # broadcast GQA kv heads
-        rep = H // Hk
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
+    assert H % Hk == 0, (H, Hk)
     tq = min(128, _round_up(Sq, 8))
     tk = min(128, _round_up(Skv, 8))
     sqp, skp = _round_up(Sq, tq), _round_up(Skv, tk)
     qt = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, sqp - Sq), (0, 0), (0, 0))),
-                      2, 1).reshape(B * H, sqp, dh)
+                      2, 1)  # (B, H, Sqp, dh)
     kt = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, skp - Skv), (0, 0), (0, 0))),
-                      2, 1).reshape(B * H, skp, dh)
+                      2, 1)  # (B, Hk, Skp, dh)
     vt = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, skp - Skv), (0, 0), (0, 0))),
-                      2, 1).reshape(B * H, skp, dh)
+                      2, 1)
     # padded keys must never win the softmax: causal masking handles the
-    # q-pad rows; mask k-pad via a window-free explicit guard in-kernel is
-    # unnecessary because padded kpos > any real qpos under causal; for
+    # q-pad rows; padded kpos > any real qpos under causal; for
     # non-causal callers we require Skv % tk == 0 (asserted).
     if not causal:
         assert skp == Skv, "non-causal flash requires Skv % tile == 0"
@@ -168,5 +291,4 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         qt, kt, vt, causal=causal, window=window, softcap=softcap,
         tq=tq, tk=tk,
         interpret=_interpret() if interpret is None else interpret)
-    o = jnp.moveaxis(o.reshape(B, H, sqp, dh), 1, 2)[:, :Sq]
-    return o
+    return jnp.moveaxis(o, 1, 2)[:, :Sq]

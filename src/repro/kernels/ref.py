@@ -22,6 +22,81 @@ def msgemm_ref(idx: jnp.ndarray, x: jnp.ndarray, scales: jnp.ndarray, *,
         table, idx, scales=scales, scale_block=scale_block, d=d)
 
 
+def msgemm_tiled_ref(codes: jnp.ndarray, x: jnp.ndarray,
+                     scales: jnp.ndarray, *, d: int, scale_block: int,
+                     tm: int, tj: int, tb: int, codebook=None,
+                     epilogue=None, bias=None,
+                     residual=None) -> jnp.ndarray:
+    """Bit-faithful oracle for the fused kernel (msgemm_pallas with
+    ``acc_in_vmem=True``): replays the exact (b, j, m) tile loops, the
+    per-tile produce dot, the chunk gather order, the §3.3 factored-scale
+    multiply, the j-ordered stripe accumulation, and the epilogue-in-
+    writeback — as plain jnp in the same op order, so interpret-mode
+    outputs match bit for bit (asserted in tests/test_kernels.py).
+
+    Mirrors ops.msgemm's padding; codes (m, k) unpacked, x (k, b),
+    bias (m,) / residual (m, b) in the kernels' column layout.
+    """
+    from repro.core import lut as lut_mod
+    from repro.core.epilogue import Epilogue
+
+    ep = epilogue or Epilogue()
+    m, k = codes.shape
+    b = x.shape[1]
+    idx = packing.pack_indices(codes, d)
+    kc = idx.shape[1]
+    rup = lambda v, t: -(-v // t) * t
+    mp, kcp, bp = rup(m, tm), rup(kc, tj), rup(b, tb)
+    sj = kcp * d // scale_block
+    idx = jnp.pad(idx, ((0, mp - m), (0, kcp - kc)))
+    xp = jnp.pad(x.astype(jnp.float32), ((0, kcp * d - x.shape[0]),
+                                         (0, bp - b)))
+    sc = jnp.pad(scales.astype(jnp.float32),
+                 ((0, mp - m), (0, sj - scales.shape[1])))
+    basis = lut_mod.tuple_basis(d, dtype=jnp.float32, codebook=codebook)
+    bias_p = (jnp.pad(bias.astype(jnp.float32), (0, mp - m))
+              if ep.bias else None)
+    res_p = (jnp.pad(residual.astype(jnp.float32),
+                     ((0, mp - m), (0, bp - b))) if ep.residual else None)
+    out_dtype = jnp.dtype(ep.out_dtype) if ep.out_dtype else jnp.float32
+    cpb = scale_block // d
+    cols = []
+    for ib in range(bp // tb):
+        acc_stripe = [None] * (mp // tm)
+        for ij in range(kcp // tj):
+            xblk = xp[ij * tj * d:(ij + 1) * tj * d,
+                      ib * tb:(ib + 1) * tb].reshape(tj, d, tb)
+            lut_t = jax.lax.dot_general(
+                basis, xblk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            for im in range(mp // tm):
+                idx_t = idx[im * tm:(im + 1) * tm, ij * tj:(ij + 1) * tj]
+                sc_t = sc[im * tm:(im + 1) * tm,
+                          ij * (tj * d // scale_block):
+                          (ij + 1) * (tj * d // scale_block)]
+                acc = jnp.zeros((tm, tb), jnp.float32)
+                for blk in range(tj // cpb):
+                    part = jnp.zeros((tm, tb), jnp.float32)
+                    for c in range(cpb):
+                        tjc = blk * cpb + c
+                        part = part + jnp.take(lut_t[:, tjc, :],
+                                               idx_t[:, tjc], axis=0)
+                    acc = acc + part * sc_t[:, blk][:, None]
+                acc_stripe[im] = (acc if acc_stripe[im] is None
+                                  else acc_stripe[im] + acc)
+        stripe = []
+        for im, total in enumerate(acc_stripe):
+            if ep.bias:
+                total = total + bias_p[im * tm:(im + 1) * tm][:, None]
+            total = ep.act_fn()(total)
+            if ep.residual:
+                total = total + res_p[im * tm:(im + 1) * tm,
+                                      ib * tb:(ib + 1) * tb]
+            stripe.append(total.astype(out_dtype))
+        cols.append(jnp.concatenate(stripe, axis=0))
+    return jnp.concatenate(cols, axis=1)[:m, :b]
+
+
 def int4_matmul_ref(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
                     scale_block: int) -> jnp.ndarray:
     """Oracle for kernels.int4_matmul: dequantize -> dense matmul."""

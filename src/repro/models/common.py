@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linear as qlinear
+from repro.core.epilogue import Epilogue
 from repro.distributed.sharding import constrain
 
 
@@ -43,10 +44,25 @@ def linear_init(key, in_dim, out_dim, cfg, quant=qlinear.DENSE, *, scale=None):
                         dtype=jnp.dtype(cfg.param_dtype), init_scale=scale)
 
 
-def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None, tag=None):
+def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None, tag=None,
+                 act="none", bias=None, residual=None, out_dtype=None):
     """``tag`` names the linear for calibration's activation-statistics
-    observer (repro.calib.stats); it never changes the computation."""
-    return qlinear.apply(p, x, quant, in_dim=in_dim, tag=tag)
+    observer (repro.calib.stats); it never changes the computation.
+
+    ``act``/``bias``/``residual``/``out_dtype`` describe the element-wise
+    tail ``y = act(Wx + bias) + residual`` (cast to ``out_dtype``): they
+    become a core.epilogue.Epilogue that fuses into the Pallas kernels'
+    final VMEM writeback and falls back to the same unfused op sequence
+    on every other backend (identical at f32 activations) — so model
+    code stops issuing separate element-wise HBM passes after its
+    quantized matmuls."""
+    ep = None
+    if act != "none" or bias is not None or residual is not None \
+            or out_dtype is not None:
+        ep = Epilogue(act=act, bias=bias is not None,
+                      residual=residual is not None, out_dtype=out_dtype)
+    return qlinear.apply(p, x, quant, in_dim=in_dim, tag=tag, epilogue=ep,
+                         bias=bias, residual=residual)
 
 
 def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
@@ -98,15 +114,25 @@ def mlp_init(key, cfg, d_ff: int, quant=None) -> dict:
     return p
 
 
-def mlp_apply(p: dict, x: jnp.ndarray, cfg, quant=None) -> jnp.ndarray:
+def mlp_apply(p: dict, x: jnp.ndarray, cfg, quant=None, *,
+              residual=None) -> jnp.ndarray:
+    """MLP with the element-wise tail folded into the linears' epilogues:
+    the non-gated activation fuses into the up projection's writeback and
+    ``residual`` (the block input) into the down projection's, so the
+    quantized hot path issues no separate activation/residual HBM passes
+    (gated variants still need the gate×up product — only the gate's
+    activation fuses)."""
     q = quant if quant is not None else cfg.quant
-    d_ff_act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
-                "gelu": jax.nn.gelu}[cfg.mlp_activation]
-    up = linear_apply(p["up"], x, q, in_dim=cfg.d_model, tag="up")
+    act_name = {"swiglu": "silu", "geglu": "gelu",
+                "gelu": "gelu"}[cfg.mlp_activation]
     if "gate" in p:
-        gate = linear_apply(p["gate"], x, q, in_dim=cfg.d_model, tag="gate")
-        h = d_ff_act(gate) * up
+        up = linear_apply(p["up"], x, q, in_dim=cfg.d_model, tag="up")
+        gate = linear_apply(p["gate"], x, q, in_dim=cfg.d_model, tag="gate",
+                            act=act_name)
+        h = gate * up
     else:
-        h = d_ff_act(up)
+        h = linear_apply(p["up"], x, q, in_dim=cfg.d_model, tag="up",
+                         act=act_name)
     h = constrain(h, *(("batch",) + ("seq",) * (h.ndim - 2) + ("mlp",)))
-    return linear_apply(p["down"], h, q, in_dim=h.shape[-1], tag="down")
+    return linear_apply(p["down"], h, q, in_dim=h.shape[-1], tag="down",
+                        residual=residual)

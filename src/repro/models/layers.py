@@ -97,8 +97,12 @@ def causal_mask(Sq: int, Skv: int, *, window: int = 0, offset: int = 0
 
 def attn_apply(p, cfg, x, positions, *, window: int = 0,
                mask: jnp.ndarray | None = None, causal: bool = True,
-               return_kv: bool = False):
+               return_kv: bool = False, residual=None):
     """Full-sequence self-attention (train / prefill).
+
+    ``residual`` (the block input) is folded into the output
+    projection's epilogue — one fused writeback instead of a separate
+    elementwise add over (B, S, d) after every attention block.
 
     Above cfg.attn_chunk the query dim is processed in chunks via
     lax.scan (flash-style row blocking, exact math): the (Sq, Skv) logits
@@ -129,7 +133,8 @@ def attn_apply(p, cfg, x, positions, *, window: int = 0,
             m = pm if m is None else (m & pm)
         out = _sdpa(cfg, q, k, v, m)
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo",
+                              residual=residual)
     out = constrain(out, "batch", "seq", "embed")
     return (out, k, v) if return_kv else out
 
@@ -160,7 +165,8 @@ def view_mask(Skv: int, positions, *, window: int = 0) -> jnp.ndarray:
     return m
 
 
-def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
+def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0,
+                residual=None):
     """Single-token decode. x (B, 1, d); cache (B, Skv, Hk, Dh); pos (B,).
 
     Returns (out, new_k, new_v).  The KV cache is logically
@@ -179,12 +185,13 @@ def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0):
     m = view_mask(Skv, pos[:, None], window=window)[:, 0]
     out = _sdpa(cfg, q, new_k, new_v, m[:, None, None, :])
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo",
+                              residual=residual)
     return out, new_k, new_v
 
 
 def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
-               *, window: int = 0):
+               *, window: int = 0, residual=None):
     """Self-attention over a paged (block-pooled) KV cache — one step of
     chunked prefill (C > 1) or batched decode (C == 1); the two share this
     code and its compiled form.
@@ -213,11 +220,12 @@ def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
     m = view_mask(view_slots.shape[1], positions, window=window)
     out = _sdpa(cfg, q, k_view, v_view, m[:, None])
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo",
+                              residual=residual)
     return out, kp.reshape(nb, bs, hk, dh), vp.reshape(nb, bs, hk, dh)
 
 
-def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions):
+def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions, *, residual=None):
     """Decoder cross-attention against precomputed encoder K/V."""
     B = x.shape[0]
     h, dh = cfg.num_heads, cfg.head_dim
@@ -226,7 +234,8 @@ def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions):
     q = q.reshape(B, -1, h, dh)
     out = _sdpa(cfg, q, enc_k, enc_v, None)
     out = common.linear_apply(p["wo"], out, cfg.quant,
-                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo")
+                              in_dim=cfg.num_heads * cfg.head_dim, tag="wo",
+                              residual=residual)
     return out
 
 

@@ -59,19 +59,20 @@ def _expert_ffn(pe: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
     q = cfg.quant
     if q.mode == "msgemm":
         q = dataclasses.replace(q, mode="int4_dequant")
-    def apply_e(tag):
+    def apply_e(tag, act="none"):
         # 'moe_'-prefixed tags keep expert input stats separate from the
-        # dense MLPs' in the calibration collector
+        # dense MLPs' in the calibration collector; the activation rides
+        # the linear's epilogue (fused on kernel backends)
         return jax.vmap(lambda p, xx: common.linear_apply(
-            p, xx, q, in_dim=xx.shape[-1], tag=f"moe_{tag}"))
+            p, xx, q, in_dim=xx.shape[-1], tag=f"moe_{tag}", act=act))
 
-    up = apply_e("up")(pe["up"], x)
-    act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
-           "gelu": jax.nn.gelu}[cfg.mlp_activation]
+    act_name = {"swiglu": "silu", "geglu": "gelu",
+                "gelu": "gelu"}[cfg.mlp_activation]
     if "gate" in pe:
-        h = act(apply_e("gate")(pe["gate"], x)) * up
+        up = apply_e("up")(pe["up"], x)
+        h = apply_e("gate", act_name)(pe["gate"], x) * up
     else:
-        h = act(up)
+        h = apply_e("up", act_name)(pe["up"], x)
     h = constrain(h, "expert", "capacity", "expert_out")
     return apply_e("down")(pe["down"], h)
 

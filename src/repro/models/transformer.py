@@ -82,7 +82,8 @@ def block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 def _ffn(p, cfg, x, aux):
     if "mlp" in p:
         h = common.norm_apply(p["ln2"], x, cfg.norm, rms_offset=cfg.rms_offset)
-        return x + common.mlp_apply(p["mlp"], h, cfg), aux
+        # residual rides the down projection's fused epilogue
+        return common.mlp_apply(p["mlp"], h, cfg, residual=x), aux
     h = common.norm_apply(p["ln2"], x, cfg.norm, rms_offset=cfg.rms_offset)
     y, a = moe.moe_apply(p["moe"], h, cfg)
     for k, v in a.items():
@@ -107,30 +108,34 @@ def block_apply(p, cfg: ModelConfig, kind: str, x, positions, *,
     if kind in ("attn", "local", "moe"):
         h = common.norm_apply(p["ln1"], x, cfg.norm, rms_offset=cfg.rms_offset)
         new_cache = dict(cache) if cache is not None else None
+        # the block-input residual rides each attention out-projection's
+        # fused epilogue (no separate x + y elementwise pass)
         if mode == "paged":
             write_slots, view_slots = paged
             y, nk, nv = layers.attn_paged(
                 p["attn"], cfg, h, cache["k"], cache["v"], positions,
-                write_slots, view_slots, window=window)
+                write_slots, view_slots, window=window, residual=x)
             new_cache["k"], new_cache["v"] = nk, nv
         elif mode == "decode":
             y, nk, nv = layers.attn_decode(
-                p["attn"], cfg, h, cache["k"], cache["v"], pos, window=window)
+                p["attn"], cfg, h, cache["k"], cache["v"], pos, window=window,
+                residual=x)
             new_cache["k"], new_cache["v"] = nk, nv
         else:
             causal = not (cfg.is_encdec and mode == "encode")
             if cache is not None:  # prefill: also write the prompt's K/V
                 y, k, v = layers.attn_apply(p["attn"], cfg, h, positions,
                                             window=window, causal=causal,
-                                            return_kv=True)
+                                            return_kv=True, residual=x)
                 new_cache["k"] = jax.lax.dynamic_update_slice(
                     cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
                 new_cache["v"] = jax.lax.dynamic_update_slice(
                     cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
             else:
                 y = layers.attn_apply(p["attn"], cfg, h, positions,
-                                      window=window, causal=causal)
-        x = x + y
+                                      window=window, causal=causal,
+                                      residual=x)
+        x = y
         if cfg.is_encdec and mode != "encode" and "cross" in p:
             hc = common.norm_apply(p["ln_cross"], x, cfg.norm,
                                    rms_offset=cfg.rms_offset)
@@ -142,8 +147,8 @@ def block_apply(p, cfg: ModelConfig, kind: str, x, positions, *,
                 new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
             else:
                 ck, cv = layers.cross_kv(p["cross"], cfg, enc_out)
-            x = x + layers.cross_attn_apply(p["cross"], cfg, hc, ck, cv,
-                                            positions)
+            x = layers.cross_attn_apply(p["cross"], cfg, hc, ck, cv,
+                                        positions, residual=x)
         x, aux = _ffn(p, cfg, x, aux)
         return x, new_cache, aux
     if kind in ("mamba", "mamba_moe"):

@@ -60,6 +60,13 @@ class Engine:
         ever hit the warm cache.
     autotune_cache : plan-cache JSON path override (None: REPRO_PLAN_CACHE
         env or the default user cache dir).
+
+    Decode tile presets: plans are resolved per phase shape, so the
+    decode batch (max_slots rows of 1 token) plans with its *actual*
+    batch — the kernel heuristic sizes tb to round_up(max_slots, 8)
+    instead of padding the batch tile to 128, and spends the VMEM freed
+    by the narrow stripe on a larger LUT tile (tj) and taller m tiles
+    (ops.msgemm_tiles' decode branch) — the produce-amortized sweet spot.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,

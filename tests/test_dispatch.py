@@ -242,7 +242,7 @@ def test_autotune_persists_and_reloads(tmp_path):
     p1 = at.autotune(MS, 16, 24, 8, "msgemm_pallas", interpret=True, reps=1)
     assert p1.source == "autotuned" and cache_file.exists()
     raw = json.loads(cache_file.read_text())
-    assert raw["version"] == 1 and len(raw["plans"]) == 1
+    assert raw["version"] == 2 and len(raw["plans"]) == 1
     key = next(iter(raw["plans"]))
     assert "msgemm_pallas" in key and "m16|k24|b8" in key
 
@@ -413,3 +413,138 @@ def test_engine_autotune_resolves_plans_at_build(small_model, tmp_path):
                                  autotune_cache=cache_file)
     assert at.num_timed_candidates == before
     assert toks2 == toks
+
+
+# ------------------------------------------------------------- epilogue
+def test_epilogue_capability_predicates():
+    """Pallas kernels advertise fused-epilogue support; jnp/dense paths
+    fall back to the unfused tail in dispatch.execute."""
+    from repro.core.epilogue import Epilogue
+
+    ep = Epilogue(act="gelu", residual=True)
+    assert registry.get_backend("msgemm_pallas").epilogue_ok(ep)
+    assert registry.get_backend("int4_pallas").epilogue_ok(ep)
+    assert not registry.get_backend("msgemm_jnp").epilogue_ok(ep)
+    assert not registry.get_backend("dense").epilogue_ok(ep)
+
+
+@pytest.mark.parametrize("backend", ["msgemm_jnp", "msgemm_pallas"])
+def test_epilogue_through_linear_apply(lin, backend):
+    """linear.apply(epilogue=...) equals separate elementwise ops for
+    both a fusing backend (Pallas) and the unfused fallback (jnp)."""
+    from repro.core.epilogue import Epilogue
+
+    p_dense, x = lin
+    p = linear.from_dense(p_dense["w"], MS)
+    pol = ExecPolicy(backend=backend, interpret=True)
+    plain = linear.apply(p, x, MS, in_dim=24, policy=pol)
+    bias = jax.random.normal(jax.random.PRNGKey(3), (16,))
+    res = jax.random.normal(jax.random.PRNGKey(4), x.shape[:-1] + (16,))
+    got = linear.apply(p, x, MS, in_dim=24, policy=pol,
+                       epilogue=Epilogue(act="silu", bias=True,
+                                         residual=True),
+                       bias=bias, residual=res)
+    want = jax.nn.silu(plain + bias) + res
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_epilogue_array_without_flag_rejected(lin):
+    """A bias/residual array that the epilogue does not declare would be
+    silently dropped — execute rejects the mismatch instead."""
+    from repro.core.epilogue import Epilogue
+
+    p_dense, x = lin
+    p = linear.from_dense(p_dense["w"], MS)
+    bias = jax.random.normal(jax.random.PRNGKey(6), (16,))
+    res = jax.random.normal(jax.random.PRNGKey(7), x.shape[:-1] + (16,))
+    with pytest.raises(ValueError, match="bias"):
+        linear.apply(p, x, MS, in_dim=24, bias=bias)
+    with pytest.raises(ValueError, match="bias"):
+        linear.apply(p, x, MS, in_dim=24, epilogue=Epilogue(act="relu"),
+                     bias=bias)
+    with pytest.raises(ValueError, match="residual"):
+        linear.apply(p, x, MS, in_dim=24, residual=res)
+
+
+def test_plan_epilogue_false_forces_unfused(lin):
+    """ExecPlan.epilogue=False disables fusion but computes the same
+    function (execute applies the tail after the kernel)."""
+    from repro.core.epilogue import Epilogue
+
+    p_dense, x = lin
+    p = linear.from_dense(p_dense["w"], MS)
+    ep = Epilogue(act="relu", residual=True)
+    res = jax.random.normal(jax.random.PRNGKey(5), x.shape[:-1] + (16,))
+    kc = -(-24 // 3)
+    tm, tj, tb = ops.msgemm_tiles(16, kc, 10, 3, 12)
+    fused_plan = ExecPlan(backend="msgemm_pallas", tm=tm, tj=tj, tb=tb,
+                          interpret=True)
+    unfused_plan = dataclasses.replace(fused_plan, epilogue=False)
+    got_f = linear.apply(p, x, MS, in_dim=24, plan=fused_plan,
+                         epilogue=ep, residual=res)
+    got_u = linear.apply(p, x, MS, in_dim=24, plan=unfused_plan,
+                         epilogue=ep, residual=res)
+    np.testing.assert_allclose(got_f, got_u, rtol=2e-5, atol=2e-5)
+
+
+def test_plan_acc_knobs_validation_and_cache_roundtrip(tmp_path):
+    """acc_in_vmem/acc_dtype/epilogue survive the JSON cache; bad
+    acc_dtype is rejected eagerly; the key separates acc dtypes."""
+    with pytest.raises(ValueError):
+        ExecPlan(backend="msgemm_pallas", acc_dtype="int8")
+    with pytest.raises(ValueError):
+        ExecPolicy(acc_dtype="int8")
+    c = dispatch.PlanCache(tmp_path / "p.json")
+    plan = ExecPlan(backend="msgemm_pallas", tm=16, tj=4, tb=8,
+                    acc_in_vmem=False, acc_dtype="bfloat16",
+                    epilogue=False)
+    c.put("k", plan)
+    reloaded = dispatch.PlanCache(tmp_path / "p.json").get("k")
+    assert reloaded.acc_in_vmem is False
+    assert reloaded.acc_dtype == "bfloat16"
+    assert reloaded.epilogue is False
+    k32 = dispatch.plan_key("msgemm_pallas", MS, 3, 16, 24, 8, "cpu",
+                            "float32")
+    kbf = dispatch.plan_key("msgemm_pallas", MS, 3, 16, 24, 8, "cpu",
+                            "bfloat16")
+    assert k32 != kbf
+
+
+def test_autotune_candidates_cover_acc_knob():
+    """The candidate grid includes the legacy-accumulation variant for
+    both Pallas backends (measurement can still pick it per shape)."""
+    cands = at.candidate_plans(MS, 3, 64, 258, 16, "msgemm_pallas", True)
+    assert any(not c.acc_in_vmem for c in cands)
+    assert any(c.acc_in_vmem for c in cands)
+    spec4 = QuantSpec(mode="int4_dequant", d=3, scale_block=8,
+                      storage="packed_u8")
+    cands4 = at.candidate_plans(spec4, 3, 64, 128, 16, "int4_pallas", True)
+    assert any(not c.acc_in_vmem for c in cands4)
+
+
+def test_decode_plan_small_batch_tb():
+    """Engine decode shapes plan with tb sized to the actual batch (not
+    padded to 128) and taller decode m tiles."""
+    pln = dispatch.plan(MS, 2048, 768, batch=4)
+    assert pln.backend in ("msgemm_jnp", "msgemm_pallas")
+    hp = dispatch.heuristic_plan(MS, 3, 2048, 768, 4, "msgemm_pallas",
+                                 ExecPolicy())
+    assert hp.tb == 8 and hp.tm == 512
+
+
+def test_model_epilogue_fusion_matches_unfused(small_model):
+    """End-to-end: the model stack (attention residuals, MLP activation +
+    residual in linear epilogues) computes the same logits whichever
+    backend runs — i.e. fused epilogues did not change model math."""
+    from repro.models import transformer as T
+
+    p, c = small_model
+    toks = np.arange(12, dtype=np.int32)[None] % c.vocab_size
+    with dispatch.using_policy(ExecPolicy(backend="msgemm_pallas",
+                                          interpret=True)):
+        lg_pallas, _ = T.forward(p, c, {"tokens": jnp.asarray(toks)},
+                                 mode="eval")
+    with dispatch.using_policy(ExecPolicy(backend="msgemm_jnp")):
+        lg_jnp, _ = T.forward(p, c, {"tokens": jnp.asarray(toks)},
+                              mode="eval")
+    np.testing.assert_allclose(lg_pallas, lg_jnp, rtol=2e-3, atol=2e-3)
