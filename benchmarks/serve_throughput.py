@@ -35,6 +35,7 @@ from repro.runtime import serve as SV
 
 RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_serve.json"
 AUTOTUNE_CACHE = Path(__file__).parent / "results" / "autotune_cache.json"
+SHARD_JSON = Path(__file__).parent / "results" / "BENCH_shard.json"
 
 CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
                   d_ff=1024, vocab_size=8192, max_seq_len=512)
@@ -178,6 +179,68 @@ def run_autotune(cache_path=None) -> list[str]:
     return lines
 
 
+def run_mesh_sweep(meshes: list[str], n=8, new_tokens=8) -> list[str]:
+    """--mesh sweep: drive the continuous engine tensor-parallel over
+    each requested mesh ('model=4,data=2' strings), assert the sharded
+    engine's greedy tokens are identical to the single-device baseline,
+    and write throughput + plan stats to BENCH_shard.json."""
+    from repro.launch.mesh import mesh_devices
+    from repro.launch.serve import parse_mesh
+    from repro.serving import Engine, poisson_stream
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, CFG)
+    spec = QuantSpec(mode="msgemm", d=3)
+    p, c = quantize_model(params, CFG, spec), CFG.replace(quant=spec)
+    eng_kw = dict(max_slots=4, block_size=8, prefill_chunk=16,
+                  max_model_len=48)
+    stream = lambda: poisson_stream(n, c.vocab_size,
+                                    max_new_tokens=new_tokens, rate=0.0,
+                                    seed=3)
+
+    def drive(mesh):
+        eng = Engine(p, c, **eng_kw, mesh=mesh)
+        eng.run(poisson_stream(2, c.vocab_size, max_new_tokens=2, seed=1))
+        eng.reset_metrics()
+        res = eng.run(stream())
+        toks = {rid: seq.generated for rid, seq in res.items()}
+        return eng, toks, eng.summary()
+
+    _, base_toks, base_s = drive(None)
+    lines = ["name,us_per_call,derived",
+             f"serve_throughput/shard/baseline,"
+             f"{1e6 / base_s['tok_per_s']:.1f},"
+             f"tok_per_s={base_s['tok_per_s']:.1f}"]
+    runs = []
+    for mesh_str in meshes:
+        mesh = parse_mesh(mesh_str)
+        eng, toks, s = drive(mesh)
+        identical = toks == base_toks
+        n_sharded = sum(1 for pl in eng.exec_plans.values()
+                        if pl.shard is not None)
+        runs.append({"mesh": mesh_str, "devices": mesh_devices(mesh),
+                     "tokens_identical": identical,
+                     "plans": len(eng.exec_plans),
+                     "sharded_plans": n_sharded, **s})
+        lines.append(
+            f"serve_throughput/shard/{mesh_str},"
+            f"{1e6 / s['tok_per_s']:.1f},"
+            f"tok_per_s={s['tok_per_s']:.1f} sharded_plans={n_sharded} "
+            f"tokens_identical={identical}")
+        if not identical:
+            raise SystemExit(
+                f"sharded engine on mesh {mesh_str} diverged from the "
+                "single-device baseline")
+    SHARD_JSON.parent.mkdir(parents=True, exist_ok=True)
+    SHARD_JSON.write_text(json.dumps(
+        {"bench": "serve_shard", "engine": eng_kw,
+         "model": {"layers": CFG.num_layers, "d_model": CFG.d_model},
+         "requests": n, "new_tokens": new_tokens,
+         "baseline": base_s, "runs": runs}, indent=2))
+    lines.append(f"serve_throughput/shard/json,0.0,{SHARD_JSON}")
+    return lines
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -187,8 +250,22 @@ def main(argv=None) -> int:
                          "persistent cache write->reload cycle")
     ap.add_argument("--cache", default=None,
                     help=f"plan-cache path (default {AUTOTUNE_CACHE})")
+    ap.add_argument("--mesh", action="append", default=None,
+                    help="mesh sweep entry, e.g. 'model=4,data=2' "
+                         "(repeatable); emits BENCH_shard.json")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="fake N host CPU devices (must be set before "
+                         "jax touches the backend)")
     args = ap.parse_args(argv)
-    lines = run_autotune(args.cache) if args.autotune else run()
+    from repro.launch.mesh import force_host_devices
+
+    force_host_devices(args.force_host_devices)
+    if args.mesh:
+        lines = run_mesh_sweep(args.mesh)
+    elif args.autotune:
+        lines = run_autotune(args.cache)
+    else:
+        lines = run()
     print("\n".join(lines))
     return 0
 

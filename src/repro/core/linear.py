@@ -175,7 +175,8 @@ def from_quantized(qt: scales.QuantizedTensor, cfg) -> dict:
 def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
           in_dim: int | None = None, precision=None,
           tag: str | None = None, plan=None, policy=None,
-          epilogue=None, bias=None, residual=None) -> jnp.ndarray:
+          epilogue=None, bias=None, residual=None,
+          shard_axes: tuple | None = None) -> jnp.ndarray:
     """x (..., in) -> y (..., out), through the dispatch registry.
 
     ``cfg`` is a QuantSpec (or deprecated QuantConfig, whose embedded
@@ -189,6 +190,11 @@ def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
     ``residual`` (..., out): the element-wise tail fused into the kernel
     writeback when the planned backend supports it, applied unfused
     (identical math) otherwise — see dispatch.execute.
+
+    ``shard_axes``: the weight's logical (out, in) axis names; under an
+    active mesh the dispatch layer plans local-shard tiles and runs the
+    backend inside a shard_map (models.common.linear_apply derives this
+    from ``tag`` automatically).
     """
     if _OBSERVER is not None and tag is not None:
         _OBSERVER.record(tag, x)
@@ -197,7 +203,7 @@ def apply(params: dict, x: jnp.ndarray, cfg=DENSE, *,
     return dispatch.execute(params, x, cfg, in_dim=in_dim,
                             precision=precision, plan_override=plan,
                             policy=policy, epilogue=epilogue, bias=bias,
-                            residual=residual)
+                            residual=residual, shard_axes=shard_axes)
 
 
 def _infer_k(params: dict, cfg) -> int:

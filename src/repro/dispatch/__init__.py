@@ -25,10 +25,14 @@ from repro.dispatch.registry import (  # noqa: F401
     register_backend, select_backend, unregister_backend,
 )
 from repro.dispatch.plan import (  # noqa: F401
-    DEFAULT_POLICY, ExecPlan, ExecPolicy, collecting, get_default_policy,
-    heuristic_plan, plan, plan_d, plan_key, set_default_policy,
-    using_policy,
+    DEFAULT_POLICY, ExecPlan, ExecPolicy, PlanRequest, collecting,
+    get_default_policy, heuristic_plan, plan, plan_d, plan_key,
+    set_default_policy, using_policy,
 )
+from repro.dispatch.shard import (  # noqa: F401
+    ShardSpec, mesh_tag, plan_shard_tag, shard_spec_for,
+)
+from repro.dispatch import shard as _shard
 from repro.dispatch import backends as _backends  # noqa: F401  (registers)
 # NOTE: the tuner *function* lives at dispatch.autotune.autotune — the
 # bare name is not re-exported so the ``autotune`` submodule stays
@@ -53,7 +57,7 @@ def split(cfg) -> tuple[QuantSpec, ExecPolicy | None]:
 def execute(params: dict, x, cfg, *, in_dim: int | None = None,
             precision=None, plan_override: ExecPlan | None = None,
             policy: ExecPolicy | None = None, epilogue: Epilogue | None = None,
-            bias=None, residual=None):
+            bias=None, residual=None, shard_axes: tuple | None = None):
     """Run one linear ``x (..., k) -> y (..., m)`` through the registry.
 
     Precedence for execution choices: explicit ``plan_override`` >
@@ -71,6 +75,12 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
     final-rounding ulps (the unfused route sees the GeMM output after
     its activation-dtype cast).  ``bias`` is (m,); ``residual`` matches
     the output shape (..., m) — both row-major model layout.
+
+    ``shard_axes`` (the weight's logical (out, in) axis names) makes the
+    linear mesh-aware: under an active mesh the resolved plan carries a
+    ShardSpec and the backend runs inside a shard_map — per-shard LUT
+    produce / VMEM accumulation, one contraction collective, the
+    epilogue applied after it (dispatch.shard.run_sharded).
     """
     from repro.core import linear as _linear
 
@@ -82,7 +92,10 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
     p = plan_override
     if p is None:
         batch = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
-        p = plan(spec, m, k, batch, policy=policy)
+        lead = x.shape[0] if x.ndim > 1 else 1
+        p = plan(spec, m, k, batch, policy=policy,
+                 shard_axes=shard_axes if x.ndim > 1 else None,
+                 lead_batch=lead)
     be = get_backend(p.backend)
     d = plan_d(spec, m, k)
     # full capability check — matters for explicit plans (plan_override /
@@ -109,6 +122,16 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
             "or use common.linear_apply, which builds it for you)")
     fuse = (epilogue is not None and not epilogue.is_identity
             and p.epilogue and be.epilogue_ok(epilogue))
+    if p.shard is not None and p.shard.is_sharded:
+        from repro.distributed.sharding import active_mesh
+
+        mesh = active_mesh()
+        if mesh is not None:
+            return _shard.run_sharded(
+                be, spec, p, params, x, k=k, mesh=mesh, precision=precision,
+                epilogue=epilogue, bias=bias, residual=residual, fuse=fuse)
+        # a sharded plan without a live mesh (explicit override outside
+        # sharding.use): fall through and run unsharded on local math
     if fuse:
         return be.run(spec, p, params, x, k=k, precision=precision,
                       epilogue=epilogue, bias=bias, residual=residual)

@@ -42,11 +42,17 @@ from repro.dispatch.plan import (
     ExecPlan, ExecPolicy, heuristic_plan, plan_d, plan_key,
 )
 
-_CACHE_VERSION = 2  # v2: +acc_in_vmem/acc_dtype/epilogue, key gains acc_dtype
-# NB: 'interpret' is deliberately not persisted — it is a runtime/policy
-# choice (plan() overlays the active policy's value on cache hits), and
-# persisting it would let an interpret-mode tuning run pin the ~100x
-# slower interpreter onto later compiled runs of the same shape.
+_CACHE_VERSION = 3  # v3: key gains the mesh/shard tag; m/k/b are
+# local-shard shapes (a 1-device winner is never replayed as a sharded
+# plan, and every mesh shape tunes independently).  v2 files migrate on
+# load: their keys gain the unsharded '|sh-' tag — v2 was only ever
+# written off-mesh, so the entries keep their value without ever
+# leaking into sharded lookups.
+# NB: 'interpret' and 'shard' are deliberately not persisted — both are
+# runtime/policy overlays (plan() re-attaches the active policy's
+# interpret mode and the live mesh's ShardSpec on every cache hit);
+# persisting interpret would let an interpret-mode tuning run pin the
+# ~100x slower interpreter onto later compiled runs of the same shape.
 _PLAN_FIELDS = ("backend", "tm", "tj", "tb", "consume_chunk",
                 "acc_in_vmem", "acc_dtype", "epilogue")
 
@@ -77,9 +83,17 @@ class PlanCache:
         self._loaded = True
         try:
             raw = json.loads(self.path.read_text())
-            if raw.get("version") != _CACHE_VERSION:
+            ver = raw.get("version")
+            if ver not in (2, _CACHE_VERSION):
                 return self
             for key, fields in raw.get("plans", {}).items():
+                if ver == 2:
+                    # v2 keys never carried a mesh tag (the format
+                    # predates sharded planning) and were only written
+                    # by unsharded runs: migrate to the '-' tag so they
+                    # keep serving single-device lookups but can never
+                    # be replayed as sharded plans.
+                    key = key + "|sh-"
                 self._plans[key] = ExecPlan(
                     **{f: fields.get(f) for f in _PLAN_FIELDS
                        if fields.get(f) is not None},
@@ -238,15 +252,21 @@ def _time_plan(backend: registry.Backend, spec: QuantSpec, p: ExecPlan,
 def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
              device: str | None = None, interpret: bool | None = None,
              acc_dtype: str = "float32", reps: int = 2,
-             persist: bool = True) -> ExecPlan:
+             persist: bool = True, tag: str = "-") -> ExecPlan:
     """Measure candidates for one shape key; cache and return the winner.
+
+    ``m/k/batch`` are the shapes the backend will actually execute on
+    one device — under a mesh the caller (dispatch.plan / warm) passes
+    the *local-shard* shapes and the matching mesh/shard ``tag``, so
+    candidates are synthesized and timed at exactly the per-device size
+    and the winner is keyed to that mesh shape.
 
     Returns the cached plan immediately when the key is known (from this
     process or a previous one via the JSON file)."""
     device = device or registry.device_kind()
     be = registry.get_backend(backend)
     d = plan_d(spec, m, k)
-    key = plan_key(backend, spec, d, m, k, batch, device, acc_dtype)
+    key = plan_key(backend, spec, d, m, k, batch, device, acc_dtype, tag)
     hit = cache().get(key)
     if hit is not None:
         # interpret is runtime policy, never part of the cached tuning
@@ -271,27 +291,39 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
 def warm(requests, *, policy: ExecPolicy | None = None,
          persist: bool = True) -> dict[str, ExecPlan]:
     """Resolve a batch of collected plan requests up front (engine
-    build).  ``requests`` holds (spec, m, k, batch, backend) tuples from
-    ``dispatch.collecting()``.  With ``policy.autotune`` each tunable key
-    is measured (and its winner persisted); otherwise keys resolve to
-    their cached winner when one exists, falling back to the heuristic —
-    heuristic plans are NOT written to the cache, so a later autotune
-    run can still improve them."""
+    build).  ``requests`` holds ``dispatch.plan.PlanRequest`` entries
+    from ``dispatch.collecting()`` (bare (spec, m, k, batch, backend)
+    tuples from older callers still work — they warm unsharded).  Shapes
+    in the requests are GLOBAL; each request's ShardSpec maps them to
+    the local-shard shapes + mesh tag that key the cache, mirroring
+    exactly what plan() will compute at trace time.  With
+    ``policy.autotune`` each tunable key is measured (and its winner
+    persisted); otherwise keys resolve to their cached winner when one
+    exists, falling back to the heuristic — heuristic plans are NOT
+    written to the cache, so a later autotune run can still improve
+    them."""
     policy = policy or ExecPolicy()
     out: dict[str, ExecPlan] = {}
     device = registry.device_kind()
-    for spec, m, k, batch, backend in dict.fromkeys(requests):
+    for req in dict.fromkeys(requests):
+        spec, m, k, batch, backend = req[:5]
+        shard = getattr(req, "shard", None)
+        tag = getattr(req, "tag", "-")
         d = plan_d(spec, m, k)
-        key = plan_key(backend, spec, d, m, k, batch, device,
-                       policy.acc_dtype)
+        lm, lk, lb = shard.local_mkb(m, k, batch) if shard is not None \
+            else (m, k, batch)
+        key = plan_key(backend, spec, d, lm, lk, lb, device,
+                       policy.acc_dtype, tag)
         if policy.autotune and registry.get_backend(backend).tunable:
-            out[key] = autotune(spec, m, k, batch, backend, device=device,
-                                interpret=policy.interpret,
-                                acc_dtype=policy.acc_dtype, persist=persist)
+            p = autotune(spec, lm, lk, lb, backend, device=device,
+                         interpret=policy.interpret,
+                         acc_dtype=policy.acc_dtype, persist=persist,
+                         tag=tag)
         else:
             hit = cache().get(key)
-            out[key] = hit if hit is not None else heuristic_plan(
-                spec, d, m, k, batch, backend, policy)
+            p = hit if hit is not None else heuristic_plan(
+                spec, d, lm, lk, lb, backend, policy)
+        out[key] = dataclasses.replace(p, shard=shard)
     return out
 
 

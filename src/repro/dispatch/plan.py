@@ -23,9 +23,13 @@ from __future__ import annotations
 import contextlib
 import math
 from dataclasses import dataclass, field, replace
+from typing import NamedTuple
 
 from repro.core.spec import QuantSpec
 from repro.dispatch import registry
+from repro.dispatch.shard import (
+    COLLECTIVES, ShardSpec, plan_shard_tag, shard_spec_for,
+)
 
 
 ACC_DTYPES = ("float32", "bfloat16", "float16", "float64")
@@ -53,6 +57,13 @@ class ExecPlan:
         the same ops after the GeMM).
     interpret : Pallas execution mode; None auto-detects (compiled on
         TPU, interpreter elsewhere).
+    shard : dispatch.shard.ShardSpec laying the GeMM out on the active
+        mesh (m / k / batch mesh axes + contraction collective); None
+        runs unsharded (or under plain GSPMD).  Like ``interpret`` it is
+        a runtime overlay — derived from the ambient mesh at plan time,
+        never persisted to the plan cache (the cache key carries the
+        mesh/shard tag instead, and tm/tj/tb are planned and timed on
+        the *local-shard* shapes).
     source : provenance tag — 'heuristic' | 'autotuned' | 'explicit';
         metadata only, excluded from equality/hash.
     """
@@ -66,6 +77,7 @@ class ExecPlan:
     acc_dtype: str = "float32"
     epilogue: bool = True
     interpret: bool | None = None
+    shard: ShardSpec | None = None
     source: str = field(default="heuristic", compare=False)
 
     def __post_init__(self):
@@ -86,6 +98,9 @@ class ExecPolicy:
         plans (acc_dtype also keys the autotune cache).
     autotune : measure candidate tile configs for unseen shape keys and
         persist winners to the plan cache.
+    shard_collective : how k-sharded (row-parallel) linears resolve
+        their partial sums under a mesh: 'psum' | 'reduce_scatter'
+        (see dispatch.shard.ShardSpec).
     plan : a fully explicit ExecPlan override (skips planning entirely).
     """
 
@@ -94,6 +109,7 @@ class ExecPolicy:
     consume_chunk: int = 1
     acc_dtype: str = "float32"
     autotune: bool = False
+    shard_collective: str = "psum"
     plan: ExecPlan | None = None
 
     def __post_init__(self):
@@ -102,6 +118,9 @@ class ExecPolicy:
         if self.acc_dtype not in ACC_DTYPES:
             raise ValueError(f"acc_dtype={self.acc_dtype!r} must be one of "
                              f"{ACC_DTYPES}")
+        if self.shard_collective not in COLLECTIVES:
+            raise ValueError(f"shard_collective={self.shard_collective!r} "
+                             f"must be one of {COLLECTIVES}")
 
 
 DEFAULT_POLICY = ExecPolicy()
@@ -137,6 +156,21 @@ def using_policy(policy: ExecPolicy | None):
 
 
 # ------------------------------------------------------- plan collection
+class PlanRequest(NamedTuple):
+    """One collected plan() call: GLOBAL shapes + the derived shard.
+    ``warm`` recomputes the local-shard shapes and cache key from these,
+    so a collected request resolves to exactly the plan the later trace
+    will ask for."""
+
+    spec: QuantSpec
+    m: int
+    k: int
+    batch: int
+    backend: str
+    shard: "ShardSpec | None" = None
+    tag: str = "-"
+
+
 _collector: list | None = None
 
 
@@ -183,13 +217,18 @@ def plan_d(spec: QuantSpec, m: int, k: int) -> int:
 
 
 def plan_key(backend: str, spec: QuantSpec, d: int, m: int, k: int,
-             batch: int, device: str, acc_dtype: str = "float32") -> str:
+             batch: int, device: str, acc_dtype: str = "float32",
+             shard: str = "-") -> str:
     """Shape key for the persistent autotune cache.  ``acc_dtype`` is
     part of the key: a winner measured at one accumulation precision is
-    never served to a caller asking for another."""
+    never served to a caller asking for another.  ``shard`` is the
+    mesh/shard tag (dispatch.shard.plan_shard_tag) and m/k/batch are the
+    *local-shard* shapes: a plan measured on one device is never
+    replayed as a sharded plan on a mesh, nor vice versa — different
+    mesh shapes key (and time) independently."""
     return (f"{device}|{backend}|{spec.mode}|d{d}|sb{spec.scale_block}|"
             f"{spec.storage}|cb{spec.codebook}|m{m}|k{k}|b{batch}|"
-            f"acc{acc_dtype}")
+            f"acc{acc_dtype}|sh{shard}")
 
 
 # ------------------------------------------------------------ heuristics
@@ -226,18 +265,39 @@ def heuristic_plan(spec: QuantSpec, d: int, m: int, k: int, batch: int,
 
 # ------------------------------------------------------------------ plan
 def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
-         device: str | None = None, policy: ExecPolicy | None = None
+         device: str | None = None, policy: ExecPolicy | None = None,
+         shard_axes: tuple | None = None, lead_batch: int | None = None
          ) -> ExecPlan:
     """Resolve the physical execution for one (spec, shape) cell.
 
-    m/k are the linear's (out, in) dims; ``batch`` the flattened
+    m/k are the linear's GLOBAL (out, in) dims; ``batch`` the flattened
     activation row count.  All static Python ints — safe at trace time.
+
+    ``shard_axes``: the weight's logical (out, in) axis names (the
+    ``distributed.sharding.LINEAR_AXES`` entry for this linear's tag).
+    With an active mesh (``distributed.sharding.use``) they derive the
+    plan's ShardSpec, and tile heuristics / cache lookups / autotuning
+    all run on the **local-shard** shapes — what one device actually
+    executes under TP.  ``lead_batch``: the activations' leading dim
+    (what the batch mesh axis shards); defaults to ``batch``.
     """
     policy = policy or get_default_policy()
     if policy.plan is not None:
         return policy.plan
     device = device or registry.device_kind()
     d = plan_d(spec, m, k)
+
+    from repro.distributed.sharding import active_mesh, active_rules
+
+    mesh = active_mesh()
+    shard = shard_spec_for(spec, shard_axes, m, k, batch, mesh,
+                           lead_batch=lead_batch,
+                           collective=policy.shard_collective,
+                           rules=active_rules())
+    if shard is not None and not shard.is_sharded:
+        shard = None
+    tag = plan_shard_tag(shard, mesh)
+    lm, lk, lb = shard.local_mkb(m, k, batch) if shard else (m, k, batch)
 
     be = None
     if policy.backend is not None:
@@ -254,23 +314,28 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
         be = registry.select_backend(spec, d, device)
 
     if _collector is not None:
-        _collector.append((spec, m, k, batch, be.name))
-        return heuristic_plan(spec, d, m, k, batch, be.name, policy)
+        _collector.append(PlanRequest(spec, m, k, batch, be.name, shard, tag))
+        return replace(heuristic_plan(spec, d, lm, lk, lb, be.name, policy),
+                       shard=shard)
 
     import repro.dispatch.autotune as at
 
-    cached = at.cache().get(plan_key(be.name, spec, d, m, k, batch, device,
-                                     policy.acc_dtype))
+    cached = at.cache().get(plan_key(be.name, spec, d, lm, lk, lb, device,
+                                     policy.acc_dtype, tag))
     if cached is not None:
-        # interpret is a runtime/policy choice, not a tunable: the
-        # current policy always wins over whatever mode the plan was
+        # interpret and shard are runtime/policy choices, not tunables:
+        # the current policy/mesh always wins over whatever the plan was
         # measured under (None -> per-backend auto-detect), so an
         # interpret-mode tuning run can never pin the interpreter onto
-        # later compiled runs.
-        return replace(cached, interpret=policy.interpret)
+        # later compiled runs, and a plan tuned on the local-shard
+        # shapes re-attaches to the live mesh on every hit.
+        return replace(cached, interpret=policy.interpret, shard=shard)
 
     if policy.autotune and be.tunable and not _tracing_active():
-        return at.autotune(spec, m, k, batch, be.name, device=device,
-                           interpret=policy.interpret,
-                           acc_dtype=policy.acc_dtype)
-    return heuristic_plan(spec, d, m, k, batch, be.name, policy)
+        return replace(
+            at.autotune(spec, lm, lk, lb, be.name, device=device,
+                        interpret=policy.interpret,
+                        acc_dtype=policy.acc_dtype, tag=tag),
+            shard=shard)
+    return replace(heuristic_plan(spec, d, lm, lk, lb, be.name, policy),
+                   shard=shard)

@@ -1,0 +1,274 @@
+"""Sharded execution of one quantized linear on a device mesh.
+
+The paper's produce/consume split interacts with tensor parallelism in a
+specific way (§6): the LUT produce cost is amortized over the output
+rows m, so sharding m (column parallelism) keeps the amortization
+*per shard* — every device produces the LUT for its own activation
+shard once and consumes it over its m rows — instead of replicating the
+whole GeMM.  Sharding the contraction dim k (row parallelism, the
+Megatron down-proj/wo pattern) makes every device produce a LUT over
+its k-slice of the activations, and the partial sums meet in exactly
+one collective, after which the epilogue (bias/residual — which must
+NOT be applied per shard) runs once.
+
+This module carries that story end to end:
+
+* :class:`ShardSpec` — the frozen, hashable ``ExecPlan.shard`` field:
+  which mesh axis shards m / k / the activation batch, which collective
+  resolves the contraction (``psum`` keeps the output replicated over
+  the k axis, ``reduce_scatter`` leaves it m-sharded), and the mesh
+  shape it was derived against (part of the plan-cache key).
+* :func:`shard_spec_for` — derives a ShardSpec for one linear from its
+  *logical* weight axes (the same ``distributed.sharding.LINEAR_AXES``
+  names the param-placement rules use), with divisibility and
+  quantization-alignment guards: a dim only shards when every packed
+  storage view (idx / u8 / scales) splits cleanly on the shard
+  boundary.  Anything that cannot shard safely (adaptive d, expert
+  stacks under vmap, misaligned dims) returns None and stays under
+  GSPMD exactly as before.
+* :func:`run_sharded` — wraps a registered backend's ``run`` in a
+  fully-manual ``shard_map``: per-shard LUT produce, per-shard VMEM
+  accumulation, the epilogue fused into the kernel writeback when no
+  contraction collective separates them, and applied exactly once
+  *after* the collective when one does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.epilogue import apply_epilogue
+from repro.distributed import compat
+from repro.distributed import sharding as shd
+
+COLLECTIVES = ("psum", "reduce_scatter")
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """How one linear's GeMM is laid out on the mesh (ExecPlan.shard).
+
+    mesh_axes : ordered ((axis_name, size), ...) snapshot of the mesh the
+        spec was derived against — makes the spec self-describing (cache
+        keys, warm()) without holding a live Mesh object.
+    m / k / batch : mesh axis name sharding the weight's output rows,
+        the contraction dim, and the activations' leading (batch) dim;
+        None leaves that dim whole on every device.  m and k are
+        mutually exclusive (one TP axis per linear).
+    collective : how k-sharded partial sums meet: ``psum`` (output
+        replicated over the k axis) or ``reduce_scatter`` (output rows
+        scattered over the k axis — the next layer's column-parallel
+        input sharding).  Ignored when k is None.
+    """
+
+    mesh_axes: tuple[tuple[str, int], ...] = ()
+    m: str | None = None
+    k: str | None = None
+    batch: str | None = None
+    collective: str = "psum"
+
+    def __post_init__(self):
+        if self.collective not in COLLECTIVES:
+            raise ValueError(f"collective={self.collective!r} must be one "
+                             f"of {COLLECTIVES}")
+        if self.m is not None and self.k is not None:
+            raise ValueError("m and k cannot both be sharded by one linear "
+                             f"(m={self.m!r}, k={self.k!r})")
+
+    # ------------------------------------------------------------ sizes
+    def axis_size(self, axis: str | None) -> int:
+        if axis is None:
+            return 1
+        return dict(self.mesh_axes)[axis]
+
+    @property
+    def is_sharded(self) -> bool:
+        return any(a is not None and self.axis_size(a) > 1
+                   for a in (self.m, self.k, self.batch))
+
+    def local_mkb(self, m: int, k: int, batch: int) -> tuple[int, int, int]:
+        """Per-device (m, k, batch-rows) — what tile heuristics and the
+        autotuner must plan/time under this spec."""
+        return (m // self.axis_size(self.m), k // self.axis_size(self.k),
+                batch // self.axis_size(self.batch))
+
+    # ------------------------------------------------------------- keys
+    def tag(self) -> str:
+        """Cache-key fragment: mesh shape + the shard choice."""
+        mesh = ".".join(f"{a}{s}" for a, s in self.mesh_axes)
+        return (f"{mesh}/m={self.m or '-'}/k={self.k or '-'}"
+                f"/b={self.batch or '-'}/{self.collective}")
+
+
+def mesh_tag(mesh) -> str:
+    """Cache-key fragment for the ambient mesh alone ('-' off-mesh).
+    Distinguishes plans measured on N devices from single-device plans
+    even when the linear itself ends up unsharded."""
+    if mesh is None:
+        return "-"
+    return ".".join(f"{a}{s}" for a, s in mesh.shape.items())
+
+
+def plan_shard_tag(shard: "ShardSpec | None", mesh) -> str:
+    return shard.tag() if shard is not None else mesh_tag(mesh)
+
+
+# ------------------------------------------------------------ derivation
+def _quant_aligned(spec, k_local: int) -> bool:
+    """Can the packed weight storage split at a k_local boundary?  Every
+    per-shard view must be whole: scale blocks (scales columns), d-chunks
+    (packed_idx columns) and code pairs (packed_u8 columns)."""
+    if spec.mode == "bf16":
+        return True
+    if k_local % spec.scale_block:
+        return False
+    if k_local % int(spec.d):
+        return False
+    if spec.storage == "packed_u8" and k_local % 2:
+        return False
+    return True
+
+
+def shard_spec_for(spec, axes, m: int, k: int, batch: int, mesh, *,
+                   lead_batch: int | None = None,
+                   collective: str = "psum",
+                   rules: str = "default") -> ShardSpec | None:
+    """Derive the ShardSpec for one linear, or None to stay under GSPMD.
+
+    ``axes``: the weight's logical (out, in) axis names — the
+    ``distributed.sharding.LINEAR_AXES`` entry for this linear's tag.
+    Candidate mesh axes come from the activation table of the selected
+    ``rules`` set (the TP table: heads / kvheads / mlp / vocab / ... ->
+    'model'), the batch axis from its 'batch' rule ('pod' x 'data' —
+    empty under 'serve_tp', which therefore never batch-shards); a
+    candidate is taken only when the dim divides and (for k) the packed
+    storage stays shard-aligned.
+
+    Adaptive-d specs never shard: ``resolve_d`` keys off the *global*
+    (in, out) dims the weights were quantized with, and a local-shape
+    resolve could silently reinterpret the packed codes.
+    """
+    if mesh is None or axes is None or len(axes) != 2:
+        return None
+    if spec.mode != "bf16" and spec.d == "adaptive":
+        return None
+    out_ax, in_ax = axes
+    act_rules = shd.RULE_SETS[rules][0]
+    mesh_axes = tuple(mesh.shape.items())
+    used: set[str] = set()
+
+    def pick(logical, dim, *, need_alignment: bool):
+        for cand in act_rules.get(logical, ()):
+            size = mesh.shape.get(cand, 1)
+            if size == 1 or cand in used or dim % size:
+                continue
+            if need_alignment and not _quant_aligned(spec, dim // size):
+                continue
+            used.add(cand)
+            return cand
+        return None
+
+    m_axis = pick(out_ax, m, need_alignment=False)
+    k_axis = None
+    if m_axis is None:
+        k_axis = pick(in_ax, k, need_alignment=True)
+    if k_axis is not None and collective == "reduce_scatter" \
+            and m % mesh.shape[k_axis]:
+        collective = "psum"  # cannot scatter the output rows: fall back
+    lead = batch if lead_batch is None else lead_batch
+    b_axis = None
+    for cand in act_rules.get("batch", ()):
+        size = mesh.shape.get(cand, 1)
+        if size == 1 or cand in used:
+            continue
+        if lead % size == 0 and batch % size == 0:
+            b_axis = cand
+            break
+    if m_axis is None and k_axis is None and b_axis is None:
+        return None
+    return ShardSpec(mesh_axes=mesh_axes, m=m_axis, k=k_axis, batch=b_axis,
+                     collective=collective)
+
+
+# -------------------------------------------------------------- execution
+def _param_specs(spec, params: dict, s: ShardSpec) -> dict:
+    """Per-leaf PartitionSpecs for a linear's param dict.  All weight
+    views share (m, k) orientation — their packed second dims split
+    cleanly because shard_spec_for guarded the alignment; the codebook
+    (16,) value table is replicated."""
+    out = {}
+    for name, leaf in params.items():
+        if name == "codebook":
+            out[name] = P(*([None] * leaf.ndim))
+        else:
+            out[name] = P(s.m, s.k)
+    return out
+
+
+def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
+                precision=None, epilogue=None, bias=None, residual=None,
+                fuse: bool = False):
+    """Run one planned linear under shard_map on ``mesh``.
+
+    The inner call sees *local* shapes — exactly the shapes
+    ``dispatch.plan`` planned tiles for — so per-shard LUT produce and
+    per-shard VMEM accumulation follow from the unmodified kernels.
+    With a k-sharded (row-parallel) linear the epilogue runs once after
+    the contraction collective; otherwise it fuses into the kernel
+    writeback per shard (disjoint m rows) whenever the backend can.
+    """
+    s = plan.shard
+    size = dict(s.mesh_axes)
+    if any(mesh.shape.get(a) != n for a, n in s.mesh_axes) \
+            or len(mesh.shape) != len(s.mesh_axes):
+        raise ValueError(
+            f"plan was sharded for mesh {dict(s.mesh_axes)} but the active "
+            f"mesh is {dict(mesh.shape)}; re-plan under the current mesh")
+    k_local = k // size.get(s.k, 1) if s.k else k
+    inner_plan = dataclasses.replace(plan, shard=None)
+    rank = x.ndim
+    mid = (None,) * (rank - 2)
+    # the m dim of y / bias / residual: m-sharded linears keep their own
+    # axis; reduce_scatter hands the k axis over; psum replicates.
+    out_m = s.m if s.k is None else (
+        s.k if s.collective == "reduce_scatter" else None)
+
+    operands = {"params": params, "x": x}
+    in_specs = {"params": _param_specs(spec, params, s),
+                "x": P(*((s.batch,) + mid + (s.k,)))}
+    if bias is not None:
+        operands["bias"] = bias
+        in_specs["bias"] = P(out_m)
+    if residual is not None:
+        operands["residual"] = residual
+        in_specs["residual"] = P(*((s.batch,) + mid + (out_m,)))
+    out_specs = P(*((s.batch,) + mid + (out_m,)))
+
+    def local(ops):
+        b_l, r_l = ops.get("bias"), ops.get("residual")
+        if s.k is None:
+            if fuse:
+                return backend.run(spec, inner_plan, ops["params"], ops["x"],
+                                   k=k_local, precision=precision,
+                                   epilogue=epilogue, bias=b_l, residual=r_l)
+            y = backend.run(spec, inner_plan, ops["params"], ops["x"],
+                            k=k_local, precision=precision)
+            return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
+        # row-parallel: partial sums over the local k slice; the epilogue
+        # must see the *resolved* sum, never the per-shard partials
+        y = backend.run(spec, inner_plan, ops["params"], ops["x"],
+                        k=k_local, precision=precision)
+        if s.collective == "reduce_scatter":
+            y = jax.lax.psum_scatter(y, s.k, scatter_dimension=y.ndim - 1,
+                                     tiled=True)
+        else:
+            y = jax.lax.psum(y, s.k)
+        return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
+
+    fn = compat.shard_map(local, mesh=mesh, in_specs=(in_specs,),
+                          out_specs=out_specs, check=False)
+    return fn(operands)

@@ -8,8 +8,9 @@ dequantized locally.  Backward is the exact FSDP transpose — a full-
 precision reduce-scatter of the gradient (straight-through w.r.t. the
 quantization, standard for compressed weight gathers).
 
-Implemented with partial-auto shard_map: only the gather axis is manual;
-the model/tensor axes stay under GSPMD.
+Implemented with fully-manual shard_map (repro.distributed.compat): the
+gather axis carries the collectives, the model/tensor axes are pure
+per-shard layout.
 """
 
 from __future__ import annotations
@@ -19,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compat
 
 
 def _gather_spec(spec: P, axis: str):
@@ -39,22 +42,17 @@ def int8_all_gather(x: jnp.ndarray, mesh, spec: P, *, axis: str = "data"):
     dim, out_spec = _gather_spec(spec, axis)
     if dim is None or axis not in mesh.shape or mesh.shape[axis] == 1:
         return x
-    # partial-auto: only the gather axis is manual; model/tensor axes stay
-    # under GSPMD — shard_map specs may only name manual axes.
-    def manual_only(s: P) -> P:
-        out = []
-        for e in s:
-            names = e if isinstance(e, tuple) else (e,)
-            out.append(axis if axis in names else None)
-        return P(*out)
-
-    m_in, m_out = manual_only(spec), manual_only(out_spec)
+    # fully-manual shard_map over the leaf's own storage spec: the only
+    # collectives inside are over `axis`; the model/tensor axes are pure
+    # layout (each shard just carries its slice through).  Partial-auto
+    # (manual_axes={axis}) would be tidier but trips the SPMD
+    # partitioner's manual-subgroup check on the older jax spelling.
     gather = functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(m_in,), out_specs=m_out,
-        axis_names={axis}, check_vma=False)
+        compat.shard_map, mesh=mesh, in_specs=(spec,), out_specs=out_spec,
+        check=False)
     scatter = functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(m_out,), out_specs=m_in,
-        axis_names={axis}, check_vma=False)
+        compat.shard_map, mesh=mesh, in_specs=(out_spec,), out_specs=spec,
+        check=False)
 
     @jax.custom_vjp
     def f(xs):
@@ -81,8 +79,7 @@ def int8_all_gather(x: jnp.ndarray, mesh, spec: P, *, axis: str = "data"):
         # reduce-scatter where profitable.
         @scatter
         def run(c):
-            n = jax.lax.axis_size(axis)
-            size = c.shape[dim] // n
+            size = c.shape[dim] // mesh.shape[axis]
             start = jax.lax.axis_index(axis) * size
             return jax.lax.dynamic_slice_in_dim(c, start, size, axis=dim)
 

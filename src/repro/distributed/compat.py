@@ -1,0 +1,63 @@
+"""Version-bridging wrappers for the two jax sharding APIs whose
+spelling moved between releases.
+
+The repo supports both spellings because the container pins one jax and
+real deployments run another:
+
+* ``set_mesh`` — newer jax exposes ``jax.set_mesh(mesh)`` as a context
+  manager; on older releases the ``Mesh`` object itself is the context
+  manager.
+* ``shard_map`` — newer jax promotes ``jax.shard_map(f, mesh=, in_specs=,
+  out_specs=, axis_names=, check_vma=)``; older releases spell it
+  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+  check_rep=, auto=)`` where ``auto`` is the *complement* of the manual
+  axis set.
+
+Everything in ``repro`` that needs either API goes through this module,
+so the rest of the codebase is written once against the stable surface:
+``compat.set_mesh(mesh)`` and ``compat.shard_map(f, mesh=..., ...,
+manual_axes=..., check=...)``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` as the ambient device mesh."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    # older jax: Mesh is itself a context manager
+    return mesh
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, manual_axes=None,
+              check: bool = False):
+    """``shard_map`` across jax versions.
+
+    ``manual_axes``: mesh axis names handled manually inside ``f`` (the
+    rest stay under GSPMD — partial auto).  None means fully manual.
+    ``check``: replication/VMA checking (off by default: the callers here
+    all perform axis-reducing collectives the checker cannot follow).
+
+    Usable directly or as a decorator factory (``f=None``).
+    """
+    if f is None:
+        return lambda fn: shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes=manual_axes, check=check)
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        if manual_axes is not None:
+            kwargs["axis_names"] = set(manual_axes)
+        return new(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kwargs = dict(check_rep=check)
+    if manual_axes is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed import compat
+
 # Resolution priority: earlier names grab contested mesh axes first.
 PRIORITY = (
     "batch", "expert", "expert_out", "heads", "kvheads", "mlp", "vocab",
@@ -96,6 +98,13 @@ RULE_SETS = {
         dict(ACT_RULES, batch=()),
         dict(PARAM_RULES, embed=()),
     ),
+    # batched serving (the continuous engine): activations keep the full
+    # default table (batch over data, kvheads over model), but params
+    # drop the embed/data FSDP dim — weights are TP-resident, so the
+    # shard_map-wrapped quantized linears (repro.dispatch.shard) see
+    # their storage sharding exactly match their in_specs and the hot
+    # path issues no per-layer FSDP gathers.
+    "serve": (ACT_RULES, dict(PARAM_RULES, embed=())),
 }
 
 
@@ -113,7 +122,7 @@ def use(mesh: Mesh, rules: str = "default"):
     prev = (_CTX.mesh, _CTX.rules)
     _CTX.mesh, _CTX.rules = mesh, rules
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             yield
     finally:
         _CTX.mesh, _CTX.rules = prev
@@ -121,6 +130,10 @@ def use(mesh: Mesh, rules: str = "default"):
 
 def active_mesh() -> Mesh | None:
     return _CTX.mesh
+
+
+def active_rules() -> str:
+    return _CTX.rules
 
 
 def _resolve(axes: tuple, shape: tuple, mesh: Mesh, table: dict) -> P:
@@ -292,6 +305,30 @@ def cache_specs(cache_shape, mesh: Mesh, rules: str = "default"):
         return spec_for(axes, leaf.shape, mesh=mesh, kind="act", rules=rules)
 
     return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# Paged-serving KV block pools (runtime.serve.init_paged_cache): leaves
+# are (G, num_blocks, block_size, Hk, Dh).  The pool has no batch dim —
+# sequences own block subsets via host-side tables — so only the
+# kvheads/head_dim tail shards (kvheads over 'model' per ACT_RULES);
+# the block and slot dims stay replicated: scatter/gather by flat slot
+# id must find every sequence's blocks on every data shard.
+PAGED_CACHE_AXES: dict[str, tuple] = {
+    "k": ("layers", "none", "none", "kvheads", "head_dim"),
+    "v": ("layers", "none", "none", "kvheads", "head_dim"),
+}
+
+
+def paged_cache_specs(pool_shape, mesh: Mesh, rules: str = "default"):
+    """PartitionSpec pytree for a runtime.serve.init_paged_cache tree."""
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        axes = PAGED_CACHE_AXES.get(
+            name, ("layers",) + ("none",) * (len(leaf.shape) - 1))
+        return spec_for(axes, leaf.shape, mesh=mesh, kind="act", rules=rules)
+
+    return jax.tree_util.tree_map_with_path(one, pool_shape)
 
 
 def batch_specs(batch_shape, mesh: Mesh, rules: str = "default"):

@@ -8,7 +8,19 @@ init; tests and benches must keep seeing 1 device.
 
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_host_devices(n: int) -> None:
+    """Fake ``n`` host CPU devices via XLA_FLAGS.  Only effective before
+    jax first touches the backend — the CLI entry points call this from
+    argument handling, ahead of any device use."""
+    if n:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,8 +33,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_mesh(shape: tuple, axes: tuple):
-    """Arbitrary mesh (elastic re-scale, tests on host devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    """Arbitrary mesh (elastic re-scale, tests on host devices).
+
+    Unlike ``jax.make_mesh`` this accepts a shape smaller than the
+    visible device count (a 2x2 sweep entry on an 8-device host uses the
+    first 4 devices) — what the serve/bench ``--mesh`` sweeps need."""
+    import numpy as np
+
+    shape, axes = tuple(shape), tuple(axes)
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if n < len(devs):
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)
 
 
 def mesh_devices(mesh) -> int:

@@ -12,6 +12,16 @@ Two engines:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --smoke \
         --quant msgemm --engine continuous --num-requests 6 \
         --backend msgemm_pallas --autotune
+
+Both engines are mesh-aware: ``--mesh model=4,data=2`` serves
+tensor-parallel over a device mesh (weights TP over 'model', batches
+over 'data', quantized GeMMs inside shard_map with per-shard LUT
+produce — see repro.dispatch.shard).  On a CPU host add
+``--force-host-devices 8`` to fake the devices:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --smoke \
+        --quant msgemm --engine continuous --mesh model=4,data=2 \
+        --force-host-devices 8
 """
 
 from __future__ import annotations
@@ -24,6 +34,7 @@ import numpy as np
 
 from repro import configs, dispatch
 from repro.core.spec import QuantSpec
+from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.quant import quantize_model
 from repro.runtime import serve as SV
@@ -45,9 +56,32 @@ def build_model(args):
 def exec_policy(args) -> dispatch.ExecPolicy | None:
     """The CLI's execution choices as an ExecPolicy (None: defaults)."""
     backend = None if args.backend == "auto" else args.backend
-    if backend is None and not args.autotune:
+    if backend is None and not args.autotune and args.mesh is None:
         return None
-    return dispatch.ExecPolicy(backend=backend, autotune=args.autotune)
+    return dispatch.ExecPolicy(backend=backend, autotune=args.autotune,
+                               shard_collective=args.shard_collective)
+
+
+def parse_mesh(s: str):
+    """'model=4,data=2' -> a jax mesh with those axes (given order)."""
+    from repro.launch import mesh as M
+
+    pairs = [kv.split("=") for kv in s.split(",") if kv]
+    axes = tuple(name for name, _ in pairs)
+    shape = tuple(int(size) for _, size in pairs)
+    need = 1
+    for n in shape:
+        need *= n
+    import jax as _jax
+
+    have = _jax.device_count()
+    if need > have:
+        raise SystemExit(
+            f"--mesh {s} needs {need} devices but only {have} are "
+            f"visible; on a CPU host pass --force-host-devices {need} "
+            "(or set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before jax initializes)")
+    return M.make_mesh(shape, axes)
 
 
 def run_static(args, params, cfg, key):
@@ -94,7 +128,7 @@ def make_request_stream(args, cfg):
                           max_prompt=args.prompt_len, seed=args.seed)
 
 
-def run_continuous(args, params, cfg):
+def run_continuous(args, params, cfg, mesh=None):
     from repro.serving import Engine
 
     max_len = args.prompt_len + args.new_tokens
@@ -106,7 +140,16 @@ def run_continuous(args, params, cfg):
                     prefill_chunk=args.prefill_chunk,
                     backend=None if args.backend == "auto" else args.backend,
                     autotune=args.autotune,
-                    autotune_cache=args.autotune_cache)
+                    autotune_cache=args.autotune_cache,
+                    mesh=mesh, mesh_rules=args.mesh_rules,
+                    shard_collective=args.shard_collective)
+    if mesh is not None:
+        n_sharded = sum(1 for p in engine.exec_plans.values()
+                        if p.shard is not None)
+        print(f"[serve] mesh {dict(mesh.shape)}: {len(engine.exec_plans)} "
+              f"plans resolved at build, {n_sharded} sharded "
+              f"(rules={args.mesh_rules}, "
+              f"collective={args.shard_collective})")
     reqs = make_request_stream(args, cfg)
     print(f"[serve] continuous engine: {len(reqs)} requests, prompt lens "
           f"{sorted(len(r.prompt) for r in reqs)}, rate="
@@ -182,13 +225,37 @@ def main(argv=None):
     ap.add_argument("--autotune-cache", default=None,
                     help="plan-cache JSON path (default: REPRO_PLAN_CACHE "
                          "env or ~/.cache/msgemm-repro/plans.json)")
+    # sharded serving (repro.dispatch.shard over a device mesh)
+    ap.add_argument("--mesh", default=None,
+                    help="serve tensor-parallel over a device mesh, e.g. "
+                         "'model=4,data=2' (axis order preserved)")
+    ap.add_argument("--mesh-rules", default="serve",
+                    choices=sorted(shd.RULE_SETS),
+                    help="logical-axis rule set for params/activations")
+    ap.add_argument("--shard-collective", default="psum",
+                    choices=["psum", "reduce_scatter"],
+                    help="contraction collective for row-parallel linears")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="fake N host CPU devices (sets XLA_FLAGS; must "
+                         "run before jax touches the backend)")
     args = ap.parse_args(argv)
+
+    from repro.launch.mesh import force_host_devices
+
+    force_host_devices(args.force_host_devices)
+    mesh = parse_mesh(args.mesh) if args.mesh else None
 
     params, cfg, key = build_model(args)
     if args.engine == "continuous":
-        return run_continuous(args, params, cfg)
+        return run_continuous(args, params, cfg, mesh)
     if args.autotune_cache is not None:
         dispatch.set_cache_path(args.autotune_cache)
+    if mesh is not None:
+        params = jax.device_put(
+            params, shd.shardings(params, mesh, args.mesh_rules))
+        with shd.use(mesh, args.mesh_rules), \
+                dispatch.using_policy(exec_policy(args)):
+            return run_static(args, params, cfg, key)
     with dispatch.using_policy(exec_policy(args)):
         return run_static(args, params, cfg, key)
 

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import linear as qlinear
 from repro.core.epilogue import Epilogue
+from repro.distributed import sharding as shd_rules
 from repro.distributed.sharding import constrain
 
 
@@ -45,9 +46,16 @@ def linear_init(key, in_dim, out_dim, cfg, quant=qlinear.DENSE, *, scale=None):
 
 
 def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None, tag=None,
-                 act="none", bias=None, residual=None, out_dtype=None):
+                 act="none", bias=None, residual=None, out_dtype=None,
+                 shard_axes=None):
     """``tag`` names the linear for calibration's activation-statistics
-    observer (repro.calib.stats); it never changes the computation.
+    observer (repro.calib.stats); it never changes the computation —
+    but it *does* name the weight's logical axes: under an active mesh
+    (distributed.sharding.use) the LINEAR_AXES entry for the tag rides
+    to the dispatch layer as ``shard_axes``, which plans local-shard
+    tiles and runs the quantized GeMM inside a shard_map (tensor
+    parallelism with per-shard LUT produce).  Tags without an entry
+    (e.g. the vmapped MoE expert linears) stay under plain GSPMD.
 
     ``act``/``bias``/``residual``/``out_dtype`` describe the element-wise
     tail ``y = act(Wx + bias) + residual`` (cast to ``out_dtype``): they
@@ -55,14 +63,18 @@ def linear_apply(p, x, quant=qlinear.DENSE, *, in_dim=None, tag=None,
     final VMEM writeback and falls back to the same unfused op sequence
     on every other backend (identical at f32 activations) — so model
     code stops issuing separate element-wise HBM passes after its
-    quantized matmuls."""
+    quantized matmuls.  Under a contraction-sharded (row-parallel) plan
+    the tail instead runs exactly once after the psum/reduce-scatter."""
     ep = None
     if act != "none" or bias is not None or residual is not None \
             or out_dtype is not None:
         ep = Epilogue(act=act, bias=bias is not None,
                       residual=residual is not None, out_dtype=out_dtype)
+    if shard_axes is None and tag is not None:
+        shard_axes = shd_rules.LINEAR_AXES.get(tag)
     return qlinear.apply(p, x, quant, in_dim=in_dim, tag=tag, epilogue=ep,
-                         bias=bias, residual=residual)
+                         bias=bias, residual=residual,
+                         shard_axes=shard_axes)
 
 
 def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:

@@ -215,8 +215,16 @@ def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
     ws = write_slots.reshape(-1)
     kp = kp.at[ws].set(k.reshape(-1, hk, dh).astype(kp.dtype))
     vp = vp.at[ws].set(v.reshape(-1, hk, dh).astype(vp.dtype))
+    # mesh-aware pool layout: slots replicated (every data shard must
+    # resolve any sequence's blocks), kvheads on the model axis when
+    # divisible — matching runtime.serve.init_paged_cache's placement so
+    # the scatter/gather pair stays local to each model shard
+    kp = constrain(kp, "none", "kvheads", "head_dim")
+    vp = constrain(vp, "none", "kvheads", "head_dim")
     k_view = jnp.take(kp, view_slots, axis=0)  # (B, W, Hk, Dh)
     v_view = jnp.take(vp, view_slots, axis=0)
+    k_view = constrain(k_view, "batch", "kv_seq", "kvheads", "head_dim")
+    v_view = constrain(v_view, "batch", "kv_seq", "kvheads", "head_dim")
     m = view_mask(view_slots.shape[1], positions, window=window)
     out = _sdpa(cfg, q, k_view, v_view, m[:, None])
     out = common.linear_apply(p["wo"], out, cfg.quant,

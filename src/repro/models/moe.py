@@ -127,6 +127,12 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, *, capacity: int | None = None):
     out = _expert_ffn(p["experts"], dispatched, cfg)  # (E, B*C, d)
     out = (out.reshape(E, B, C, d).transpose(1, 0, 2, 3)
            .reshape(B, E * C, d))
+    # Pin the expert-slot dim replicated before the per-example combine:
+    # the concat(+sentinel row)+take pair below is not partitionable
+    # along E*C, and letting the expert sharding flow into it makes the
+    # SPMD partitioner gather from the wrong shards (observed 1e-1
+    # output error on an 8-device host mesh — not reassociation noise).
+    out = constrain(out, "batch", "none", "none")
 
     def example_gather(out_b, dest_b):
         padded = jnp.concatenate([out_b, jnp.zeros((1, d), out_b.dtype)], 0)

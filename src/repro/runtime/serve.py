@@ -44,8 +44,23 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.float32):
-    return transformer.init_paged_cache(cfg, num_blocks, block_size, dtype)
+                     dtype=jnp.float32, *, mesh=None, rules: str = "serve"):
+    """Paged KV block pool; with ``mesh`` the pool tensors are laid out
+    per the logical sharding rules (kvheads over 'model' when divisible,
+    block/slot dims replicated — distributed.sharding.paged_cache_specs)
+    so the engine's donated pool buffer keeps its placement across
+    steps."""
+    kv = transformer.init_paged_cache(cfg, num_blocks, block_size, dtype)
+    if mesh is None:
+        return kv
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    specs = shd.paged_cache_specs(kv, mesh, rules)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda s: isinstance(s, P))
+    return jax.device_put(kv, shardings)
 
 
 def paged_step(params, cfg: ModelConfig, tokens, pool, positions,

@@ -20,6 +20,7 @@ non-owned slots to probability exactly 0.
 
 from __future__ import annotations
 
+import contextlib
 import time
 
 import jax
@@ -27,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dispatch
+from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.runtime import serve as SV
 from repro.serving import kv_blocks
@@ -60,6 +62,20 @@ class Engine:
         ever hit the warm cache.
     autotune_cache : plan-cache JSON path override (None: REPRO_PLAN_CACHE
         env or the default user cache dir).
+    mesh : a jax device mesh (e.g. ``launch.mesh.make_mesh((2, 4),
+        ("data", "model"))``) — the engine becomes tensor-parallel:
+        params and the paged KV pool are laid out per ``mesh_rules``
+        (weights TP over 'model', the pool's kvheads over 'model', step
+        batches over 'data'), the jitted step traces under the mesh so
+        every quantized linear plans local-shard tiles and runs inside a
+        shard_map, and ALL exec plans are resolved once at build —
+        exactly the autotune warm-up path, whether or not autotuning is
+        on — so tracing never derives a shard mid-step.
+    mesh_rules : logical-axis rule set (distributed.sharding.RULE_SETS);
+        'serve' keeps activations data-parallel and weights TP-resident
+        with no FSDP gathers on the hot path.
+    shard_collective : 'psum' | 'reduce_scatter' — how row-parallel
+        (contraction-sharded) linears resolve partial sums.
 
     Decode tile presets: plans are resolved per phase shape, so the
     decode batch (max_slots rows of 1 token) plans with its *actual*
@@ -67,6 +83,7 @@ class Engine:
     instead of padding the batch tile to 128, and spends the VMEM freed
     by the narrow stripe on a larger LUT tile (tj) and taller m tiles
     (ops.msgemm_tiles' decode branch) — the produce-amortized sweet spot.
+    Under a mesh the same presets apply to the per-device shard shapes.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
@@ -75,7 +92,14 @@ class Engine:
                  cache_dtype=jnp.float32, on_token=None,
                  clock=time.perf_counter, sample_seed: int = 0,
                  backend: str | None = None, autotune: bool = False,
-                 autotune_cache=None):
+                 autotune_cache=None, mesh=None, mesh_rules: str = "serve",
+                 shard_collective: str = "psum"):
+        self.mesh = mesh
+        self.mesh_rules = mesh_rules
+        self._input_shardings: dict = {}
+        if mesh is not None:
+            params = jax.device_put(params,
+                                    shd.shardings(params, mesh, mesh_rules))
         self.params = params
         self.cfg = cfg
         self.max_model_len = max_model_len or cfg.max_seq_len
@@ -85,7 +109,8 @@ class Engine:
             num_blocks = max_slots * self.max_blocks_per_seq + 1
         self.pool = BlockPool(num_blocks, block_size)
         self.kv = SV.init_paged_cache(cfg, num_blocks, block_size,
-                                      cache_dtype)
+                                      cache_dtype, mesh=mesh,
+                                      rules=mesh_rules)
         self.scheduler = Scheduler(self.pool, max_slots=max_slots,
                                    prefill_chunk=prefill_chunk)
         self.max_slots = max_slots
@@ -111,39 +136,74 @@ class Engine:
         self._step_fn = jax.jit(raw_step, donate_argnums=(1,))
 
         # execution planning: resolve every linear's ExecPlan once, at
-        # build — never per step.  With no backend/autotune request the
-        # policy is None and behavior is exactly the per-config default.
+        # build — never per step.  With no backend/autotune request and
+        # no mesh the policy is None and behavior is exactly the
+        # per-config default.  A mesh always triggers build-time
+        # resolution (the warm-up is how sharded plans + their cache
+        # keys come into existence before the trace).
         self._policy = None
         self.exec_plans: dict = {}
-        if backend is not None or autotune:
+        if backend is not None or autotune or mesh is not None:
             if autotune_cache is not None:
                 dispatch.set_cache_path(autotune_cache)
-            self._policy = dispatch.ExecPolicy(backend=backend,
-                                               autotune=autotune)
+            self._policy = dispatch.ExecPolicy(
+                backend=backend, autotune=autotune,
+                shard_collective=shard_collective)
             self.exec_plans = self._resolve_plans(raw_step)
 
+    def _mesh_ctx(self):
+        return (shd.use(self.mesh, self.mesh_rules) if self.mesh is not None
+                else contextlib.nullcontext())
+
     def _resolve_plans(self, raw_step) -> dict:
-        """Collect the (spec, m, k, batch) plan keys both step phases
-        will request (abstract eval_shape — nothing is executed), then
-        warm/autotune each concretely so jit tracing only hits cache."""
+        """Collect the (spec, m, k, batch, shard) plan keys both step
+        phases will request (abstract eval_shape under the mesh —
+        nothing is executed), then warm/autotune each concretely so jit
+        tracing only hits cache."""
         B, C = self.max_slots, self.prefill_chunk
         W = self.max_blocks_per_seq * self.block_size
-        with dispatch.using_policy(self._policy), dispatch.collecting() as reqs:
+        with self._mesh_ctx(), dispatch.using_policy(self._policy), \
+                dispatch.collecting() as reqs:
             for nb, nt in ((1, C), (B, 1)):  # prefill chunk, decode batch
                 jax.eval_shape(
                     raw_step, self.params, self.kv,
                     np.zeros((nb, nt), np.int32), np.zeros((nb, nt), np.int32),
                     np.zeros((nb, nt), np.int32), np.zeros((nb, W), np.int32),
                     np.zeros((nb,), np.int32))
-        return dispatch.warm(reqs, policy=self._policy)
+        with self._mesh_ctx():
+            return dispatch.warm(reqs, policy=self._policy)
 
-    def _call_step(self, *args):
+    def _put_inputs(self, *arrays):
+        """Device-place one step's host arrays: leading (row) dim over
+        the batch mesh axis when divisible (decode: max_slots over
+        'data'), replicated otherwise (prefill's single row).  The
+        NamedShardings are memoized per shape — the engine only ever
+        steps two shape sets (prefill chunk / decode batch), and the
+        rule walk should not rerun once per generated token."""
+        if self.mesh is None:
+            return arrays
+        from jax.sharding import NamedSharding
+
+        out = []
+        for a in arrays:
+            sharding = self._input_shardings.get(a.shape)
+            if sharding is None:
+                spec = shd.spec_for(("batch",) + ("none",) * (a.ndim - 1),
+                                    a.shape, mesh=self.mesh, kind="act",
+                                    rules=self.mesh_rules)
+                sharding = NamedSharding(self.mesh, spec)
+                self._input_shardings[a.shape] = sharding
+            out.append(jax.device_put(a, sharding))
+        return tuple(out)
+
+    def _call_step(self, params, pool, *host_arrays):
         """Invoke the shared jitted step with this engine's exec policy
-        active — the policy is consumed at trace time (first call per
-        phase shape), where plan() finds the cache pre-warmed by
+        (and mesh) active — both are consumed at trace time (first call
+        per phase shape), where plan() finds the cache pre-warmed by
         ``_resolve_plans``."""
-        with dispatch.using_policy(self._policy):
-            return self._step_fn(*args)
+        with self._mesh_ctx(), dispatch.using_policy(self._policy):
+            return self._step_fn(params, pool,
+                                 *self._put_inputs(*host_arrays))
 
     # ------------------------------------------------------------- clock
     @property

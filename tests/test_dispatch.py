@@ -242,7 +242,7 @@ def test_autotune_persists_and_reloads(tmp_path):
     p1 = at.autotune(MS, 16, 24, 8, "msgemm_pallas", interpret=True, reps=1)
     assert p1.source == "autotuned" and cache_file.exists()
     raw = json.loads(cache_file.read_text())
-    assert raw["version"] == 2 and len(raw["plans"]) == 1
+    assert raw["version"] == 3 and len(raw["plans"]) == 1
     key = next(iter(raw["plans"]))
     assert "msgemm_pallas" in key and "m16|k24|b8" in key
 
@@ -290,6 +290,54 @@ def test_corrupt_cache_degrades_gracefully(tmp_path):
     assert dispatch.PlanCache(bad).get("k") == ExecPlan(backend="dense")
 
 
+def test_v2_cache_migrates_to_unsharded_keys(tmp_path):
+    """Format migration: a v2 cache file (no mesh/shard tags — written
+    before sharded planning existed) loads with its keys mapped to the
+    unsharded '-' tag: single-device lookups keep their tuned plans with
+    zero re-timing, and a sharded (mesh-tagged) lookup can NEVER be
+    served from it."""
+    d = dispatch.plan_d(MS, 16, 24)
+    v2_key = (f"cpu|msgemm_pallas|msgemm|d{d}|sb{MS.scale_block}|"
+              f"{MS.storage}|cb{MS.codebook}|m16|k24|b8|accfloat32")
+    cache_file = tmp_path / "v2.json"
+    cache_file.write_text(json.dumps({"version": 2, "plans": {
+        v2_key: {"backend": "msgemm_pallas", "tm": 16, "tj": 8, "tb": 8,
+                 "consume_chunk": 1, "acc_in_vmem": True,
+                 "acc_dtype": "float32", "epilogue": True}}}))
+    dispatch.set_cache_path(cache_file)
+
+    # the migrated entry serves the v3 single-device key...
+    v3_key = dispatch.plan_key("msgemm_pallas", MS, d, 16, 24, 8, "cpu")
+    assert v3_key == v2_key + "|sh-"
+    hit = dispatch.cache().get(v3_key)
+    assert hit is not None and (hit.tm, hit.tj, hit.tb) == (16, 8, 8)
+
+    # ...with zero re-timing through the autotuner front-end...
+    before = at.num_timed_candidates
+    p = at.autotune(MS, 16, 24, 8, "msgemm_pallas", interpret=True, reps=1)
+    assert at.num_timed_candidates == before
+    assert (p.tm, p.tj, p.tb) == (16, 8, 8)
+
+    # ...and never satisfies a mesh-tagged (sharded) lookup
+    sharded_key = dispatch.plan_key(
+        "msgemm_pallas", MS, d, 16, 24, 8, "cpu",
+        shard="data2.model4/m=model/k=-/b=data/psum")
+    assert dispatch.cache().get(sharded_key) is None
+
+    # a save after migration writes the current (v3) format
+    dispatch.cache().put("x|shdata2.model4", ExecPlan(backend="dense"))
+    raw = json.loads(cache_file.read_text())
+    assert raw["version"] == 3
+    assert set(raw["plans"]) == {v3_key, "x|shdata2.model4"}
+
+
+def test_unknown_cache_version_degrades_to_empty(tmp_path):
+    f = tmp_path / "v9.json"
+    f.write_text(json.dumps({"version": 9, "plans": {"k": {
+        "backend": "dense"}}}))
+    assert len(dispatch.PlanCache(f)) == 0
+
+
 def test_autotune_suppressed_inside_trace(lin):
     """plan() must never time candidates while a jax trace is active
     (omnistaging would stage the 'timed' ops into the ambient trace) —
@@ -315,7 +363,8 @@ def test_collecting_records_requests():
         dispatch.plan(MS, 16, 24, 8)
         dispatch.plan(MS, 16, 24, 8)
     assert len(reqs) == 2
-    assert reqs[0] == (MS, 16, 24, 8, "msgemm_jnp")
+    assert reqs[0][:5] == (MS, 16, 24, 8, "msgemm_jnp")
+    assert reqs[0].shard is None and reqs[0].tag == "-"  # no mesh active
     warmed = dispatch.warm(reqs)
     assert len(warmed) == 1  # deduped
 

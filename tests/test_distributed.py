@@ -104,6 +104,7 @@ def test_int8_all_gather_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.distributed import compat
         from repro.distributed.collectives import int8_all_gather
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 6)) * 0.3
@@ -112,7 +113,7 @@ def test_int8_all_gather_subprocess():
         def f(x):
             g = int8_all_gather(x, mesh, spec, axis="data")
             return g, jnp.sum(g * jnp.arange(48.0).reshape(8, 6))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = jax.jit(lambda x: f(x)[0])(xs)
             err = float(jnp.max(jnp.abs(out - x)))
             assert err <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6, err
