@@ -36,6 +36,13 @@ import numpy as np
 
 RESULTS = Path(__file__).parent / "results"
 
+# BENCH_kernels.json schema history:
+#   (unversioned) — PR 4: per-shape new/legacy/epilogue timings + parity
+#   2 — PR 6: adds schema_version, and per shape a "roofline" block
+#       (produce/consume op split, bytes moved, attainable_s,
+#       roofline_fraction, hardware model) from the obs.costs model
+BENCH_KERNELS_SCHEMA = 2
+
 # name, d, scale_block, m, k, b — decode shapes are the tall-skinny
 # (large-m, small-b) cells where the legacy grid's produce re-computation
 # dominated; prefill is the wide-batch sanity cell.
@@ -123,6 +130,12 @@ def run(shapes=None, reps: int = 2) -> dict:
 
         t_unfused = _bench(unfused, reps)
         parity = _parity_bitexact(d, sb, m, k, b)
+        from repro.obs import costs
+
+        ann = costs.annotate(t_new, m, k, b, quant="msgemm", d=d)
+        roofline = {f: ann[f] for f in
+                    ("produce_flops", "consume_ops", "flops", "bytes",
+                     "attainable_s", "roofline_fraction", "hardware")}
         rows.append({
             "shape": name, "d": d, "scale_block": sb, "m": m, "k": k, "b": b,
             "tiles": {"tm": tm, "tj": tj, "tb": tb},
@@ -132,14 +145,18 @@ def run(shapes=None, reps: int = 2) -> dict:
             "epilogue_fused_s": t_fused, "epilogue_unfused_s": t_unfused,
             "epilogue_fusion_speedup": t_unfused / t_fused,
             "identity_parity_bitexact_vs_ref": parity,
+            "roofline": roofline,
         })
         print(f"[kernels] {name}: amort={amort} "
               f"new={t_new * 1e3:.1f}ms legacy={t_old * 1e3:.1f}ms "
               f"({t_old / t_new:.2f}x) epilogue fused/unfused="
-              f"{t_unfused / t_fused:.2f}x parity={'OK' if parity else 'FAIL'}")
+              f"{t_unfused / t_fused:.2f}x "
+              f"roofline={roofline['roofline_fraction']:.3g} "
+              f"parity={'OK' if parity else 'FAIL'}")
 
     decode = [r for r in rows if r["shape"].startswith("decode")]
     out = {
+        "schema_version": BENCH_KERNELS_SCHEMA,
         "device": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "reps": reps,

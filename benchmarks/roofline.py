@@ -368,6 +368,44 @@ def cell_terms(arch: str, shape_name: str, quant: str = "auto",
     }
 
 
+# ---------------------------------------------------------------------------
+# kernel-level roofline (obs.costs bridge)
+# ---------------------------------------------------------------------------
+# The cells above price whole model steps on a pod; these wrappers price
+# ONE kernel invocation on THIS process's device, so microbenchmarks and
+# the kernels/ops.profile_gemm hook can annotate every measured wall
+# time with an achieved-vs-attainable fraction.  The arithmetic model is
+# shared with src/repro/obs/costs.py (same Eq. 9 produce/consume split).
+
+def kernel_cost(m: int, k: int, b: int, quant: str = "msgemm",
+                d: int = 3) -> dict:
+    """Per-invocation flops/bytes (obs.costs.gemm_cost re-export)."""
+    from repro.obs import costs
+
+    return costs.gemm_cost(m, k, b, quant=quant, d=d)
+
+
+def kernel_attainable_s(m: int, k: int, b: int, quant: str = "msgemm",
+                        d: int = 3, backend: str | None = None) -> float:
+    """Roofline lower bound for one (b,k)x(k,m) call on the current (or
+    named) jax backend's hardware model."""
+    from repro.obs import costs
+
+    return costs.attainable_s(costs.gemm_cost(m, k, b, quant=quant, d=d),
+                              costs.device(backend))
+
+
+def kernel_fraction(measured_s: float, m: int, k: int, b: int,
+                    quant: str = "msgemm", d: int = 3,
+                    backend: str | None = None) -> float:
+    """attainable / measured for one invocation (1.0 = at the roofline)."""
+    from repro.obs import costs
+
+    return costs.achieved_fraction(
+        measured_s, costs.gemm_cost(m, k, b, quant=quant, d=d),
+        costs.device(backend))
+
+
 def load_dryrun(arch: str, shape: str, mesh: str = "single",
                 quant: str = "auto") -> dict | None:
     if quant == "auto":

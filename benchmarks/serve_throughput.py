@@ -25,7 +25,7 @@ from pathlib import Path
 
 import jax
 
-from repro import dispatch
+from repro import dispatch, obs
 from repro.core.spec import QuantSpec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -36,6 +36,14 @@ from repro.runtime import serve as SV
 RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_serve.json"
 AUTOTUNE_CACHE = Path(__file__).parent / "results" / "autotune_cache.json"
 SHARD_JSON = Path(__file__).parent / "results" / "BENCH_shard.json"
+
+# BENCH_serve.json / BENCH_shard.json schema history:
+#   (unversioned) — PR 2-5: tok/s + latency/TTFT percentiles per run
+#   2 — PR 6: adds schema_version; per run preemptions/evicted_blocks/
+#       admitted + intertoken percentiles (engine.metrics()), and a
+#       "queue_depth" block sampled each scheduler step via the obs
+#       registry
+BENCH_SERVE_SCHEMA = 2
 
 CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
                   d_ff=1024, vocab_size=8192, max_seq_len=512)
@@ -83,6 +91,19 @@ def run() -> list[str]:
     return lines
 
 
+def _queue_depth() -> dict:
+    """Per-step queue-depth distribution for the run just measured.
+    ``Engine.reset_metrics()`` clears the ``serving_*`` registry prefix,
+    so the histogram holds exactly the measured run's samples."""
+    for h in obs.registry().series("histogram"):
+        if h.name == "serving_queue_depth_samples":
+            return {"samples": h.count,
+                    "mean": h.sum / h.count if h.count else 0.0,
+                    "max": h.max if h.count else 0.0,
+                    "p50": h.percentile(50), "p95": h.percentile(95)}
+    return {"samples": 0, "mean": 0.0, "max": 0.0, "p50": 0.0, "p95": 0.0}
+
+
 def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
                 ) -> list[str]:
     """Continuous-batching engine at several simulated arrival rates
@@ -109,8 +130,9 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
             eng.run(poisson_stream(n, c.vocab_size,
                                    max_new_tokens=new_tokens, rate=rate))
             s = eng.summary()
+            qd = _queue_depth()
             run = {"mode": mode, "arrival_rate": rate, "requests": n,
-                   "new_tokens": new_tokens, **s}
+                   "new_tokens": new_tokens, "queue_depth": qd, **s}
             runs.append(run)
             tag = f"continuous/{mode}/rate{rate:g}"
             lines.append(
@@ -119,10 +141,12 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
                 f"p50_ms={s['latency_p50_s'] * 1e3:.1f} "
                 f"p95_ms={s['latency_p95_s'] * 1e3:.1f} "
                 f"ttft_p50_ms={s['ttft_p50_s'] * 1e3:.1f} "
-                f"preemptions={s['preemptions']}")
+                f"preemptions={s['preemptions']} "
+                f"evicted_blocks={s['evicted_blocks']} "
+                f"queue_p95={qd['p95']:g}")
     RESULTS_JSON.parent.mkdir(parents=True, exist_ok=True)
     RESULTS_JSON.write_text(json.dumps(
-        {"bench": "serve_continuous",
+        {"bench": "serve_continuous", "schema_version": BENCH_SERVE_SCHEMA,
          "engine": {"max_slots": 4, "block_size": 8, "prefill_chunk": 16},
          "model": {"layers": CFG.num_layers, "d_model": CFG.d_model},
          "runs": runs}, indent=2))
@@ -179,18 +203,31 @@ def run_autotune(cache_path=None) -> list[str]:
     return lines
 
 
-def run_mesh_sweep(meshes: list[str], n=8, new_tokens=8) -> list[str]:
+def run_mesh_sweep(meshes: list[str], n=8, new_tokens=8,
+                   trace_out=None) -> list[str]:
     """--mesh sweep: drive the continuous engine tensor-parallel over
     each requested mesh ('model=4,data=2' strings), assert the sharded
     engine's greedy tokens are identical to the single-device baseline,
-    and write throughput + plan stats to BENCH_shard.json."""
+    and write throughput + plan stats to BENCH_shard.json.
+
+    With ``trace_out`` the whole sweep is traced: the Chrome-trace file
+    attributes sharded step time to per-shard compute vs contraction
+    collectives (shard.compute.* / shard.collective.* spans)."""
     from repro.launch.mesh import mesh_devices
     from repro.launch.serve import parse_mesh
     from repro.serving import Engine, poisson_stream
 
+    if trace_out:
+        # must precede engine builds: jit marks are staged at trace time
+        obs.enable_tracing(clear=True)
+
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, CFG)
-    spec = QuantSpec(mode="msgemm", d=3)
+    # d=2 / scale_block=8 keeps the packed storage shard-aligned at every
+    # k_local this sweep produces, so row-parallel (k-sharded + psum)
+    # plans actually form — with d=3 the d-chunk alignment guard rejects
+    # them all and the sweep would only ever exercise column-parallel
+    spec = QuantSpec(mode="msgemm", d=2, scale_block=8)
     p, c = quantize_model(params, CFG, spec), CFG.replace(quant=spec)
     eng_kw = dict(max_slots=4, block_size=8, prefill_chunk=16,
                   max_model_len=48)
@@ -204,7 +241,7 @@ def run_mesh_sweep(meshes: list[str], n=8, new_tokens=8) -> list[str]:
         eng.reset_metrics()
         res = eng.run(stream())
         toks = {rid: seq.generated for rid, seq in res.items()}
-        return eng, toks, eng.summary()
+        return eng, toks, {**eng.summary(), "queue_depth": _queue_depth()}
 
     _, base_toks, base_s = drive(None)
     lines = ["name,us_per_call,derived",
@@ -233,11 +270,17 @@ def run_mesh_sweep(meshes: list[str], n=8, new_tokens=8) -> list[str]:
                 "single-device baseline")
     SHARD_JSON.parent.mkdir(parents=True, exist_ok=True)
     SHARD_JSON.write_text(json.dumps(
-        {"bench": "serve_shard", "engine": eng_kw,
+        {"bench": "serve_shard", "schema_version": BENCH_SERVE_SCHEMA,
+         "engine": eng_kw,
          "model": {"layers": CFG.num_layers, "d_model": CFG.d_model},
          "requests": n, "new_tokens": new_tokens,
          "baseline": base_s, "runs": runs}, indent=2))
     lines.append(f"serve_throughput/shard/json,0.0,{SHARD_JSON}")
+    if trace_out:
+        jax.effects_barrier()  # flush pending jit-mark callbacks
+        obs.tracer().save(trace_out)
+        obs.disable_tracing()
+        lines.append(f"serve_throughput/shard/trace,0.0,{trace_out}")
     return lines
 
 
@@ -253,6 +296,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", action="append", default=None,
                     help="mesh sweep entry, e.g. 'model=4,data=2' "
                          "(repeatable); emits BENCH_shard.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --mesh: write a Chrome-trace JSON of the "
+                         "sweep (compute vs collective attribution)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake N host CPU devices (must be set before "
                          "jax touches the backend)")
@@ -261,7 +307,7 @@ def main(argv=None) -> int:
 
     force_host_devices(args.force_host_devices)
     if args.mesh:
-        lines = run_mesh_sweep(args.mesh)
+        lines = run_mesh_sweep(args.mesh, trace_out=args.trace_out)
     elif args.autotune:
         lines = run_autotune(args.cache)
     else:

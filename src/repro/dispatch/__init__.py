@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import math
 
+from repro import obs
 from repro.core.epilogue import Epilogue, apply_epilogue  # noqa: F401
 from repro.core.spec import QuantSpec, as_spec
 from repro.dispatch.registry import (  # noqa: F401
@@ -89,9 +90,9 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
     k = in_dim if in_dim is not None else _linear._infer_k(params, spec)
     m = (params["w"].shape[0] if spec.mode == "bf16"
          else params["scales"].shape[0])
+    batch = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
     p = plan_override
     if p is None:
-        batch = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
         lead = x.shape[0] if x.ndim > 1 else 1
         p = plan(spec, m, k, batch, policy=policy,
                  shard_axes=shard_axes if x.ndim > 1 else None,
@@ -122,6 +123,13 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
             "or use common.linear_apply, which builds it for you)")
     fuse = (epilogue is not None and not epilogue.is_identity
             and p.epilogue and be.epilogue_ok(epilogue))
+    if epilogue is not None and not epilogue.is_identity:
+        # fusion *rate* = fused / (fused + unfused); counted per traced
+        # call site, which is once per (shape, phase) executable
+        obs.registry().counter(
+            "dispatch_epilogue_total",
+            help="non-identity epilogues by fused/unfused execution",
+            fused="true" if fuse else "false").inc()
     if p.shard is not None and p.shard.is_sharded:
         from repro.distributed.sharding import active_mesh
 
@@ -132,8 +140,15 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
                 epilogue=epilogue, bias=bias, residual=residual, fuse=fuse)
         # a sharded plan without a live mesh (explicit override outside
         # sharding.use): fall through and run unsharded on local math
+    mark = f"gemm.{be.name}.m{m}.k{k}.b{batch}"
+    labels = {"backend": be.name, "m": m, "k": k, "b": batch}
+    x = obs.jit_begin(x, mark)
     if fuse:
-        return be.run(spec, p, params, x, k=k, precision=precision,
-                      epilogue=epilogue, bias=bias, residual=residual)
+        y = be.run(spec, p, params, x, k=k, precision=precision,
+                   epilogue=epilogue, bias=bias, residual=residual)
+        return obs.jit_end(y, mark, cat="gemm", hist="kernel_gemm_s",
+                           hist_labels=labels)
     y = be.run(spec, p, params, x, k=k, precision=precision)
+    y = obs.jit_end(y, mark, cat="gemm", hist="kernel_gemm_s",
+                    hist_labels=labels)
     return apply_epilogue(y, epilogue, bias=bias, residual=residual)

@@ -36,6 +36,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import obs
 from repro.core.spec import QuantSpec
 from repro.dispatch import registry
 from repro.dispatch.plan import (
@@ -76,6 +77,7 @@ class PlanCache:
     def __init__(self, path: str | os.PathLike | None = None):
         self.path = Path(path) if path is not None else default_cache_path()
         self._plans: dict[str, ExecPlan] = {}
+        self._timings: dict[str, list] = {}
         self._loaded = False
 
     # ------------------------------------------------------------- io
@@ -98,6 +100,13 @@ class PlanCache:
                     **{f: fields.get(f) for f in _PLAN_FIELDS
                        if fields.get(f) is not None},
                     source="autotuned")
+            # additive key (still version 3): per-key candidate timing
+            # tables from the tuning run that produced each winner.
+            # Older readers never look at it; older writers simply drop
+            # it on their next save.
+            t = raw.get("timings")
+            if isinstance(t, dict):
+                self._timings.update(t)
         except (OSError, ValueError, TypeError):
             pass  # absent/corrupt cache -> start empty
         return self
@@ -107,6 +116,9 @@ class PlanCache:
             key: {f: getattr(p, f) for f in _PLAN_FIELDS
                   if getattr(p, f) is not None}
             for key, p in sorted(self._plans.items())}}
+        if self._timings:
+            payload["timings"] = {k: self._timings[k]
+                                  for k in sorted(self._timings)}
         self.path.parent.mkdir(parents=True, exist_ok=True)
         tmp = self.path.with_suffix(".tmp")
         tmp.write_text(json.dumps(payload, indent=1))
@@ -118,12 +130,22 @@ class PlanCache:
             self.load()
         return self._plans.get(key)
 
-    def put(self, key: str, plan: ExecPlan, *, persist: bool = True) -> None:
+    def put(self, key: str, plan: ExecPlan, *, persist: bool = True,
+            timings: list | None = None) -> None:
         if not self._loaded:
             self.load()
         self._plans[key] = plan
+        if timings is not None:
+            self._timings[key] = timings
         if persist:
             self.save()
+
+    def timings(self, key: str) -> list | None:
+        """Candidate timing rows recorded when ``key`` was tuned (None
+        for keys tuned before timings were persisted)."""
+        if not self._loaded:
+            self.load()
+        return self._timings.get(key)
 
     def __len__(self) -> int:
         if not self._loaded:
@@ -245,6 +267,13 @@ def _time_plan(backend: registry.Backend, spec: QuantSpec, p: ExecPlan,
         t0 = time.perf_counter()
         run()
         best = min(best, time.perf_counter() - t0)
+    reg = obs.registry()
+    reg.counter("dispatch_autotune_candidates_total",
+                help="tile candidates measured",
+                backend=backend.name).inc()
+    reg.histogram("dispatch_autotune_candidate_s",
+                  help="best-of-reps candidate wall time",
+                  backend=backend.name).observe(best)
     return best
 
 
@@ -278,11 +307,20 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
     cands = candidate_plans(spec, d, m, k, batch, backend, interpret,
                             acc_dtype)
     params, x = _synthetic_call(spec, d, m, k, batch)
-    timed = [(_time_plan(be, spec, p, params, x, k, reps), i, p)
-             for i, p in enumerate(cands)]
-    _, _, winner = min(timed)
+    with obs.tracer().span("autotune", cat="dispatch", key=key,
+                           candidates=len(cands)):
+        timed = [(_time_plan(be, spec, p, params, x, k, reps), i, p)
+                 for i, p in enumerate(cands)]
+    best_s, best_i, winner = min(timed)
     winner = dataclasses.replace(winner, source="autotuned")
-    cache().put(key, winner, persist=persist)
+    # candidate timings ride along in the cache JSON instead of being
+    # discarded — they are the calibration data for the analytic perf
+    # model (ROADMAP item 3) and make regressions diffable across runs
+    rows = [{"s": t, "tm": p.tm, "tj": p.tj, "tb": p.tb,
+             "consume_chunk": p.consume_chunk,
+             "acc_in_vmem": p.acc_in_vmem, "winner": i == best_i}
+            for t, i, p in sorted(timed)]
+    cache().put(key, winner, persist=persist, timings=rows)
     # same contract as a cache hit: the caller's interpret overlays the
     # winner (a fresh tune and a reload must return identical plans)
     return dataclasses.replace(winner, interpret=interpret)

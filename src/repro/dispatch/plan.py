@@ -25,6 +25,7 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import NamedTuple
 
+from repro import obs
 from repro.core.spec import QuantSpec
 from repro.dispatch import registry
 from repro.dispatch.shard import (
@@ -314,14 +315,24 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
         be = registry.select_backend(spec, d, device)
 
     if _collector is not None:
+        # collection is an abstract dry run — its plan() calls are not
+        # real resolutions, so they stay out of the telemetry
         _collector.append(PlanRequest(spec, m, k, batch, be.name, shard, tag))
         return replace(heuristic_plan(spec, d, lm, lk, lb, be.name, policy),
                        shard=shard)
+
+    reg = obs.registry()
+    reg.counter("dispatch_backend_selected_total",
+                help="plan resolutions per backend",
+                backend=be.name).inc()
 
     import repro.dispatch.autotune as at
 
     cached = at.cache().get(plan_key(be.name, spec, d, lm, lk, lb, device,
                                      policy.acc_dtype, tag))
+    reg.counter("dispatch_plan_cache_total",
+                help="persistent plan-cache lookups",
+                result="hit" if cached is not None else "miss").inc()
     if cached is not None:
         # interpret and shard are runtime/policy choices, not tunables:
         # the current policy/mesh always wins over whatever the plan was

@@ -41,6 +41,7 @@ from dataclasses import dataclass
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.epilogue import apply_epilogue
 from repro.distributed import compat
 from repro.distributed import sharding as shd
@@ -248,25 +249,49 @@ def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
         in_specs["residual"] = P(*((s.batch,) + mid + (out_m,)))
     out_specs = P(*((s.batch,) + mid + (out_m,)))
 
+    # trace attribution: compute vs contraction collective, named by the
+    # shard layout so a mesh trace splits step time between them.  The
+    # marks are keyed to the *output* of each stage (data dependency, no
+    # ordered side channel — safe under shard_map), and fire once per
+    # device shard.
+    tagname = s.tag()
+    mk_compute = f"shard.compute.{tagname}.k{k_local}"
+    mk_coll = f"shard.collective.{s.collective}.{tagname}"
+
     def local(ops):
         b_l, r_l = ops.get("bias"), ops.get("residual")
+        x_l = obs.jit_begin(ops["x"], mk_compute)
         if s.k is None:
             if fuse:
-                return backend.run(spec, inner_plan, ops["params"], ops["x"],
-                                   k=k_local, precision=precision,
-                                   epilogue=epilogue, bias=b_l, residual=r_l)
-            y = backend.run(spec, inner_plan, ops["params"], ops["x"],
+                y = backend.run(spec, inner_plan, ops["params"], x_l,
+                                k=k_local, precision=precision,
+                                epilogue=epilogue, bias=b_l, residual=r_l)
+                return obs.jit_end(y, mk_compute, cat="shard",
+                                   hist="shard_compute_s",
+                                   hist_labels={"tag": tagname})
+            y = backend.run(spec, inner_plan, ops["params"], x_l,
                             k=k_local, precision=precision)
+            y = obs.jit_end(y, mk_compute, cat="shard",
+                            hist="shard_compute_s",
+                            hist_labels={"tag": tagname})
             return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
         # row-parallel: partial sums over the local k slice; the epilogue
         # must see the *resolved* sum, never the per-shard partials
-        y = backend.run(spec, inner_plan, ops["params"], ops["x"],
+        y = backend.run(spec, inner_plan, ops["params"], x_l,
                         k=k_local, precision=precision)
+        y = obs.jit_end(y, mk_compute, cat="shard",
+                        hist="shard_compute_s",
+                        hist_labels={"tag": tagname})
+        y = obs.jit_begin(y, mk_coll)
         if s.collective == "reduce_scatter":
             y = jax.lax.psum_scatter(y, s.k, scatter_dimension=y.ndim - 1,
                                      tiled=True)
         else:
             y = jax.lax.psum(y, s.k)
+        y = obs.jit_end(y, mk_coll, cat="shard",
+                        hist="shard_collective_s",
+                        hist_labels={"collective": s.collective,
+                                     "axis": s.k})
         return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
 
     fn = compat.shard_map(local, mesh=mesh, in_specs=(in_specs,),

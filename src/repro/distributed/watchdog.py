@@ -18,6 +18,8 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+from repro import obs
+
 
 @dataclass
 class Watchdog:
@@ -50,6 +52,12 @@ class Watchdog:
 
     def _hang(self):
         self.hang_count += 1
+        obs.registry().counter(
+            "watchdog_hangs_total",
+            help="hang-timer firings (step exceeded hang_factor x mean)"
+        ).inc()
+        obs.tracer().instant("watchdog.hang", cat="watchdog",
+                             hang_count=self.hang_count)
         if self.on_hang:
             self.on_hang()
 
@@ -64,6 +72,12 @@ class Watchdog:
             if std > 0 and (dt - mean) / std > self.z_threshold:
                 self.straggler_count += 1
                 info["straggler"] = True
+                obs.registry().counter(
+                    "watchdog_stragglers_total",
+                    help="steps whose z-score exceeded the threshold"
+                ).inc()
+                obs.tracer().instant("watchdog.straggler", cat="watchdog",
+                                     step_time=dt, mean=mean, std=std)
                 if self.on_straggler:
                     self.on_straggler(dt, mean, std)
         self._times.append(dt)

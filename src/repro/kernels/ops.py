@@ -258,6 +258,60 @@ def int4_matmul(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
     return y[:, 0] if squeeze else y
 
 
+def profile_gemm(kind: str, m: int, k: int, b: int, *, d: int = 3,
+                 scale_block: int | None = None, reps: int = 3,
+                 interpret: bool | None = None, seed: int = 0) -> dict:
+    """Time one kernel invocation on synthetic data and annotate it with
+    the analytic cost model (obs.costs): per-shape wall time, the
+    produce-vs-consume op split, bytes moved, and the achieved-vs-
+    roofline fraction for this process's device.
+
+    ``kind``: 'msgemm' | 'int4'.  Times best-of-``reps`` of one jitted
+    call (compile excluded), records the measurement into the
+    ``kernel_profile_s`` registry histogram, and returns the annotated
+    row — what kernel_microbench embeds in BENCH_kernels.json.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro import obs
+
+    sb = scale_block if scale_block is not None else 12 * d
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    sc = jnp.asarray(np.abs(rng.standard_normal((m, -(-k // sb)))) + 0.1,
+                     jnp.float32)
+    if kind == "msgemm":
+        codes = jnp.asarray(rng.integers(0, 16, size=(m, k)), jnp.uint8)
+        fn = jax.jit(lambda: msgemm(codes, x, d, scales=sc, scale_block=sb,
+                                    interpret=interpret))
+        quant = "msgemm"
+    elif kind == "int4":
+        u8 = jnp.asarray(
+            packing.pack_storage(rng.integers(0, 16, size=(m, k))
+                                 .astype(np.uint8)))
+        fn = jax.jit(lambda: int4_matmul(u8, sc, x, scale_block=sb,
+                                         interpret=interpret))
+        quant = "int4_dequant"
+    else:
+        raise ValueError(f"kind={kind!r} must be 'msgemm' or 'int4'")
+
+    jax.block_until_ready(fn())  # compile + warm
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, _time.perf_counter() - t0)
+
+    row = obs.costs.annotate(best, m, k, b, quant=quant, d=d)
+    row["kind"] = kind
+    obs.registry().histogram(
+        "kernel_profile_s", help="profiled kernel wall time",
+        kind=kind, m=m, k=k, b=b).observe(best)
+    return row
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                     interpret=None):
     """Multi-head attention via the flash kernel.

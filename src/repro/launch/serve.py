@@ -27,12 +27,13 @@ produce — see repro.dispatch.shard).  On a CPU host add
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
-from repro import configs, dispatch
+from repro import configs, dispatch, obs
 from repro.core.spec import QuantSpec
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
@@ -238,6 +239,16 @@ def main(argv=None):
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake N host CPU devices (sets XLA_FLAGS; must "
                          "run before jax touches the backend)")
+    # observability (repro.obs) — all off by default, near-zero cost off
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a versioned registry snapshot "
+                         "(obs.metrics) on exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and write Chrome-trace JSON "
+                         "(load at https://ui.perfetto.dev) on exit")
+    ap.add_argument("--prom-port", type=int, default=0,
+                    help="expose /metrics in Prometheus text format on "
+                         "this port for the lifetime of the run")
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import force_host_devices
@@ -245,19 +256,48 @@ def main(argv=None):
     force_host_devices(args.force_host_devices)
     mesh = parse_mesh(args.mesh) if args.mesh else None
 
-    params, cfg, key = build_model(args)
-    if args.engine == "continuous":
-        return run_continuous(args, params, cfg, mesh)
-    if args.autotune_cache is not None:
-        dispatch.set_cache_path(args.autotune_cache)
-    if mesh is not None:
-        params = jax.device_put(
-            params, shd.shardings(params, mesh, args.mesh_rules))
-        with shd.use(mesh, args.mesh_rules), \
-                dispatch.using_policy(exec_policy(args)):
+    # tracing must be on BEFORE the engine builds/compiles: jit marks are
+    # staged at trace time, so a later enable would record host spans but
+    # no in-graph gemm/collective events
+    if args.trace_out:
+        obs.enable_tracing(clear=True)
+    prom = None
+    if args.prom_port:
+        prom = obs.serve_prometheus(args.prom_port)
+        print(f"[serve] prometheus /metrics on port "
+              f"{prom.server_address[1]}")
+
+    try:
+        params, cfg, key = build_model(args)
+        if args.engine == "continuous":
+            return run_continuous(args, params, cfg, mesh)
+        if args.autotune_cache is not None:
+            dispatch.set_cache_path(args.autotune_cache)
+        if mesh is not None:
+            params = jax.device_put(
+                params, shd.shardings(params, mesh, args.mesh_rules))
+            with shd.use(mesh, args.mesh_rules), \
+                    dispatch.using_policy(exec_policy(args)):
+                return run_static(args, params, cfg, key)
+        with dispatch.using_policy(exec_policy(args)):
             return run_static(args, params, cfg, key)
-    with dispatch.using_policy(exec_policy(args)):
-        return run_static(args, params, cfg, key)
+    finally:
+        if args.trace_out:
+            jax.effects_barrier()  # flush in-flight debug callbacks
+            obs.tracer().save(args.trace_out)
+            obs.disable_tracing()
+            print(f"[serve] wrote trace {args.trace_out} "
+                  f"({len(obs.tracer().events())} events)")
+        if args.metrics_json:
+            snap = obs.registry().snapshot(extra={
+                "arch": args.arch, "quant": args.quant,
+                "engine": args.engine, "mesh": args.mesh,
+                "backend": args.backend})
+            with open(args.metrics_json, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"[serve] wrote metrics snapshot {args.metrics_json}")
+        if prom is not None:
+            prom.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Artifact validation CLI — the schema gate CI runs:
+
+    python -m repro.obs --validate-snapshot metrics.json
+    python -m repro.obs --validate-trace trace.json
+
+Exit 0 when every named artifact is schema-valid; exit 1 with one
+problem per line otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs import validate_snapshot_file, validate_trace_file
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    ap.add_argument("--validate-snapshot", action="append", default=[],
+                    metavar="PATH", help="metrics snapshot JSON to check")
+    ap.add_argument("--validate-trace", action="append", default=[],
+                    metavar="PATH", help="Chrome-trace JSON to check")
+    args = ap.parse_args(argv)
+    if not args.validate_snapshot and not args.validate_trace:
+        ap.error("nothing to validate")
+
+    problems: list[str] = []
+    for p in args.validate_snapshot:
+        problems += [f"{p}: {e}" for e in validate_snapshot_file(p)]
+    for p in args.validate_trace:
+        problems += [f"{p}: {e}" for e in validate_trace_file(p)]
+
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        return 1
+    n = len(args.validate_snapshot) + len(args.validate_trace)
+    print(f"ok: {n} artifact(s) schema-valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

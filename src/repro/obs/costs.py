@@ -1,0 +1,116 @@
+"""Analytic per-GeMM cost model: flops / bytes / attainable time.
+
+``benchmarks/roofline.py`` prices *whole model steps* against a pod;
+this module prices *one kernel invocation* on *this process's device*
+so kernel profiling hooks (``kernels/ops``) and the microbench can
+annotate every measured wall time with an achieved-vs-attainable
+fraction.  Conventions match the roofline module (1 MAC = 2 FLOPs;
+LUT-consume table adds = 1 op each, retired on the vector unit on
+current TPUs — the paper §6 limiting factor).
+
+Hardware table is keyed by ``jax.default_backend()``.  The tpu entry is
+the tpu-v5e-class chip used throughout EXPERIMENTS.md; the cpu/gpu
+entries are deliberately rough — on CPU the "fraction" column is only
+useful for relative comparison between shapes, and the microbench
+records which hardware model priced each row.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+
+@dataclass(frozen=True)
+class Device:
+    name: str
+    matmul_flops: float   # peak dense-matmul FLOP/s (MXU / tensor core)
+    vector_flops: float   # peak vector-unit op rate (LUT consume adds)
+    mem_bw: float         # B/s main-memory bandwidth
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+DEVICES = {
+    # tpu-v5e-class, mirrored from benchmarks/roofline.Hardware
+    "tpu": Device("tpu-v5e-class", 197e12, 4e12, 819e9),
+    # a100-class single die (PAPERS.md Tensor Core study numbers)
+    "gpu": Device("a100-class", 312e12, 19.5e12, 1555e9),
+    # honest-but-rough host numbers: one AVX2 socket-ish
+    "cpu": Device("cpu-host", 1e11, 5e10, 3e10),
+}
+
+
+def device(backend: str | None = None) -> Device:
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return DEVICES.get(backend, DEVICES["cpu"])
+
+
+def gemm_cost(m: int, k: int, b: int, *, quant: str = "msgemm",
+              d: int = 3, dtype_bytes: float = 2.0) -> dict:
+    """Cost of one (b, k) x (k, m) GeMM invocation.
+
+    Returns produce/consume op counts (paper Eq. 9 accounting), bytes
+    moved through main memory, and the arithmetic totals the roofline
+    fraction divides by.  ``quant`` other than msgemm prices the dense
+    path (produce = the whole matmul, consume = 0).
+    """
+    if quant == "msgemm":
+        produce = 2.0 * 16**d * k * b          # LUT build: MXU matmul
+        consume = float(m) * (k / d) * b       # table adds (VPU)
+        weight_bytes = (32 / d) / 8 * m * k    # packed digit indices
+    else:
+        produce = 2.0 * m * k * b
+        consume = 0.0
+        weight_bytes = dtype_bytes * m * k
+    act_bytes = dtype_bytes * b * k
+    out_bytes = dtype_bytes * b * m
+    return {
+        "m": m, "k": k, "b": b, "quant": quant, "d": d,
+        "produce_flops": produce,
+        "consume_ops": consume,
+        "flops": produce + consume,
+        "bytes": weight_bytes + act_bytes + out_bytes,
+        "weight_bytes": weight_bytes,
+    }
+
+
+def attainable_s(cost: dict, dev: Device | None = None) -> float:
+    """Roofline lower bound for one invocation: max of the compute term
+    (produce at matmul rate + consume at vector rate) and the memory
+    term."""
+    dev = dev or device()
+    compute = (cost["produce_flops"] / dev.matmul_flops
+               + cost["consume_ops"] / dev.vector_flops)
+    memory = cost["bytes"] / dev.mem_bw
+    return max(compute, memory)
+
+
+def achieved_fraction(measured_s: float, cost: dict,
+                      dev: Device | None = None) -> float:
+    """attainable / measured — 1.0 means running at the roofline, small
+    means leaving performance on the table.  0.0 when measured time is
+    degenerate."""
+    if measured_s <= 0.0:
+        return 0.0
+    return attainable_s(cost, dev) / measured_s
+
+
+def annotate(measured_s: float, m: int, k: int, b: int, *,
+             quant: str = "msgemm", d: int = 3,
+             dev: Device | None = None) -> dict:
+    """One-call convenience for benchmark rows: cost + attainable +
+    fraction + the hardware model that priced it."""
+    dev = dev or device()
+    cost = gemm_cost(m, k, b, quant=quant, d=d)
+    att = attainable_s(cost, dev)
+    return {
+        **cost,
+        "measured_s": measured_s,
+        "attainable_s": att,
+        "roofline_fraction": att / measured_s if measured_s > 0 else 0.0,
+        "hardware": dev.name,
+    }

@@ -1,0 +1,291 @@
+"""Structured span/event tracer emitting Chrome-trace (Perfetto) JSON.
+
+Two recording surfaces share one event buffer:
+
+* **Host spans** — ``with tracer().span("engine.step"): ...`` around
+  ordinary Python (the engine loop, the scheduler, benchmarks).  These
+  are complete ("ph": "X") events with microsecond timestamps.
+* **Jit marks** — :func:`jit_begin` / :func:`jit_end` stage a
+  ``jax.debug.callback`` into the *current trace* whose firing is
+  ordered by data dependency: the begin-mark depends on the kernel's
+  input (fires when the input is ready ≈ compute start) and the
+  end-mark on its output (fires when the result materializes ≈ compute
+  end).  The host side pairs them by name into "X" events, so a jitted
+  serving step yields per-linear GeMM and per-collective spans inside
+  the same trace as the engine's host spans.
+
+**Zero overhead when disabled** is a hard contract: ``tracer().enabled``
+is checked at *trace time* (plain Python), so with tracing off not a
+single callback is staged into the jitted computation — the lowered HLO
+is byte-identical to a build without obs.  ``jit_marks_staged`` counts
+staged marks so tests can assert exactly that.  Consequence: enable
+tracing *before* building/compiling the thing you want traced;
+already-compiled executables keep whatever was staged when they traced.
+
+Load the written file at https://ui.perfetto.dev (or
+chrome://tracing) — README §Observability.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import AbstractContextManager
+
+TRACE_SCHEMA_VERSION = 1
+
+# observability-of-the-observability: how many jit marks were staged
+# into traces since import (tests assert 0 on the tracing-off path)
+jit_marks_staged = 0
+
+# Perfetto lane ids: host-side spans vs events fired from jax callback
+# threads (kept separate so reordered callback arrivals cannot corrupt
+# the host lane's nesting)
+TID_HOST = 0
+TID_JIT = 1
+
+
+class _NullSpan(AbstractContextManager):
+    __slots__ = ()
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span(AbstractContextManager):
+    __slots__ = ("tracer", "name", "cat", "args", "t0")
+
+    def __init__(self, tracer, name, cat, args):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer._complete(self.name, self.cat, self.t0,
+                              time.perf_counter(), self.args, TID_HOST)
+        return False
+
+
+class Tracer:
+    def __init__(self):
+        self.enabled = False
+        self._events: list[dict] = []
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+        self._open: dict[str, list[float]] = {}  # jit-mark pairing stacks
+        self._pid = os.getpid()
+
+    # ----------------------------------------------------------- control
+    def enable(self, *, clear: bool = False) -> None:
+        if clear:
+            self.clear()
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._open.clear()
+        self._t0 = time.perf_counter()
+
+    # ----------------------------------------------------------- record
+    def _us(self, t: float) -> float:
+        return (t - self._t0) * 1e6
+
+    def _complete(self, name, cat, t0, t1, args, tid) -> None:
+        ev = {"name": name, "cat": cat, "ph": "X", "pid": self._pid,
+              "tid": tid, "ts": self._us(t0),
+              "dur": max(self._us(t1) - self._us(t0), 0.0)}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def span(self, name: str, cat: str = "host", **args):
+        """Context manager recording one complete event (no-op singleton
+        when disabled — safe on hot loops)."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, args or None)
+
+    def instant(self, name: str, cat: str = "host", **args) -> None:
+        if not self.enabled:
+            return
+        ev = {"name": name, "cat": cat, "ph": "i", "s": "p",
+              "pid": self._pid, "tid": TID_HOST,
+              "ts": self._us(time.perf_counter())}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def counter(self, name: str, **values) -> None:
+        """Chrome-trace counter track (ph "C") — e.g. queue depth over
+        time next to the spans."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._events.append({"name": name, "ph": "C",
+                                 "pid": self._pid, "tid": TID_HOST,
+                                 "ts": self._us(time.perf_counter()),
+                                 "args": values})
+
+    # -------------------------------------------------- jit-mark pairing
+    def _jit_begin(self, name: str) -> None:
+        with self._lock:
+            self._open.setdefault(name, []).append(time.perf_counter())
+
+    def _jit_end(self, name: str, cat: str, args: dict | None) -> float:
+        t1 = time.perf_counter()
+        with self._lock:
+            stack = self._open.get(name)
+            t0 = stack.pop() if stack else None
+        if t0 is None:  # unmatched (callback reorder): degrade to instant
+            with self._lock:
+                self._events.append({"name": name, "cat": cat, "ph": "i",
+                                     "s": "p", "pid": self._pid,
+                                     "tid": TID_JIT, "ts": self._us(t1)})
+            return 0.0
+        self._complete(name, cat, t0, t1, args, TID_JIT)
+        return t1 - t0
+
+    # ------------------------------------------------------------ export
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def save(self, path) -> dict:
+        """Write Chrome-trace JSON (Perfetto-loadable) and return the
+        document."""
+        doc = {
+            "traceEvents": self.events(),
+            "displayTimeUnit": "ms",
+            "metadata": {"schema_version": TRACE_SCHEMA_VERSION,
+                         "producer": "repro.obs",
+                         "pid": self._pid},
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        return doc
+
+    @staticmethod
+    def load(path) -> dict:
+        with open(path) as f:
+            return json.load(f)
+
+
+_TRACER = Tracer()
+
+
+def tracer() -> Tracer:
+    return _TRACER
+
+
+def enable_tracing(*, clear: bool = False) -> Tracer:
+    _TRACER.enable(clear=clear)
+    return _TRACER
+
+
+def disable_tracing() -> None:
+    _TRACER.disable()
+
+
+# ------------------------------------------------------------- jit marks
+def _probe(value):
+    """A scalar view of ``value`` for the callback operand — the
+    callback must depend on the array without shipping the whole buffer
+    to the host."""
+    import jax.numpy as jnp
+
+    if hasattr(value, "ndim") and value.ndim > 0:
+        return value[(0,) * value.ndim]
+    return jnp.asarray(value)
+
+
+def jit_begin(value, name: str):
+    """Stage a begin-mark whose firing depends on ``value`` being
+    computed; returns ``value`` unchanged.  No-op (nothing staged) when
+    tracing is off at trace time."""
+    t = _TRACER
+    if not t.enabled:
+        return value
+    global jit_marks_staged
+    jit_marks_staged += 1
+    import jax
+
+    jax.debug.callback(lambda _: t._jit_begin(name), _probe(value))
+    return value
+
+
+def jit_end(value, name: str, cat: str = "jit", args: dict | None = None,
+            hist: str | None = None, hist_labels: dict | None = None):
+    """Stage the matching end-mark on ``value`` (the op's output);
+    returns ``value`` unchanged.  When ``hist`` is given, the measured
+    duration is also observed into that registry histogram (e.g.
+    per-collective seconds) — attribution lands in both the trace and
+    the metrics snapshot."""
+    t = _TRACER
+    if not t.enabled:
+        return value
+    global jit_marks_staged
+    jit_marks_staged += 1
+    import jax
+
+    labels = dict(hist_labels or {})
+
+    def cb(_):
+        dur = t._jit_end(name, cat, args)
+        if hist is not None:
+            from repro.obs import metrics as M
+
+            M.registry().histogram(hist, **labels).observe(dur)
+
+    jax.debug.callback(cb, _probe(value))
+    return value
+
+
+# ------------------------------------------------------------ validation
+def validate_trace(doc: dict) -> list[str]:
+    """Schema check for a saved trace document (empty list == valid)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["trace is not an object"]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["traceEvents missing or not a list"]
+    meta = doc.get("metadata", {})
+    if meta.get("schema_version") != TRACE_SCHEMA_VERSION:
+        errs.append(f"metadata.schema_version="
+                    f"{meta.get('schema_version')!r} != "
+                    f"{TRACE_SCHEMA_VERSION}")
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict):
+            errs.append(f"traceEvents[{i}] not an object")
+            continue
+        for f in ("name", "ph", "ts", "pid", "tid"):
+            if f not in ev:
+                errs.append(f"traceEvents[{i}] ({ev.get('name')}) "
+                            f"missing {f!r}")
+        if ev.get("ph") == "X" and "dur" not in ev:
+            errs.append(f"traceEvents[{i}] complete event missing dur")
+    return errs
+
+
+def validate_trace_file(path) -> list[str]:
+    try:
+        doc = json.loads(open(path).read())
+    except (OSError, ValueError) as e:
+        return [f"unreadable trace {path}: {e}"]
+    return validate_trace(doc)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import dispatch
+from repro import dispatch, obs
 from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.runtime import serve as SV
@@ -35,6 +35,32 @@ from repro.serving import kv_blocks
 from repro.serving.kv_blocks import BlockPool
 from repro.serving.request import Phase, Request, Sequence, detokenize
 from repro.serving.scheduler import Scheduler
+
+# queue depth / batch occupancy are small integers, not latencies
+DEPTH_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+class _StepTimer:
+    """Times one engine iteration into serving_step_s{phase=}.  Wall
+    time includes device sync only when tracing is on (the engine blocks
+    inside the span then); untraced it measures the host dispatch path,
+    which is still the right signal for engine-loop overhead."""
+
+    __slots__ = ("engine", "phase", "t0")
+
+    def __init__(self, engine, phase):
+        self.engine = engine
+        self.phase = phase
+
+    def __enter__(self):
+        self.t0 = self.engine._clock()
+        return self
+
+    def __exit__(self, *exc):
+        obs.registry().histogram(
+            "serving_step_s", help="engine iteration wall time",
+            phase=self.phase).observe(self.engine._clock() - self.t0)
+        return False
 
 
 class Engine:
@@ -228,6 +254,10 @@ class Engine:
         seq = Sequence(req=req,
                        t_arrival=self.now if arrival is None else arrival)
         self.scheduler.add(seq)
+        obs.registry().counter("serving_requests_submitted_total",
+                               help="requests queued").inc()
+        obs.tracer().instant("request.submit", cat="serving",
+                             rid=req.rid, prompt_tokens=len(req.prompt))
         return seq
 
     # -------------------------------------------------------------- step
@@ -236,6 +266,7 @@ class Engine:
         Returns sequences that finished this iteration."""
         done: list[Sequence] = []
         act = self.scheduler.schedule()
+        self._sample_depths()
         if act is None:
             if self.scheduler.waiting:
                 raise RuntimeError(
@@ -247,6 +278,21 @@ class Engine:
         else:
             self._decode_batch(act[1], done)
         return done
+
+    def _sample_depths(self) -> None:
+        """Per-iteration queue/occupancy samples (gauge = live view for
+        /metrics; histogram = distribution for BENCH_serve.json)."""
+        reg = obs.registry()
+        depth = len(self.scheduler.waiting)
+        running = len(self.scheduler.running)
+        reg.gauge("serving_queue_depth",
+                  help="waiting requests").set(depth)
+        reg.gauge("serving_running_seqs",
+                  help="admitted sequences").set(running)
+        reg.histogram("serving_queue_depth_samples",
+                      help="queue depth at each engine iteration",
+                      buckets=DEPTH_BUCKETS).observe(depth)
+        obs.tracer().counter("queue", waiting=depth, running=running)
 
     def _prefill_chunk(self, seq: Sequence, start: int, end: int,
                        done: list) -> None:
@@ -261,8 +307,13 @@ class Engine:
         vs = kv_blocks.view_slots(seq.blocks, self.max_blocks_per_seq,
                                   self.block_size)[None]
         last = np.array([n - 1], np.int32)
-        tok, logits, self.kv = self._call_step(
-            self.params, self.kv, tokens, positions, ws, vs, last)
+        with obs.tracer().span("engine.prefill_chunk", cat="serving",
+                               rid=seq.req.rid, start=start, end=end), \
+                self._step_timer("prefill"):
+            tok, logits, self.kv = self._call_step(
+                self.params, self.kv, tokens, positions, ws, vs, last)
+            if obs.tracer().enabled:  # sync so the span covers compute,
+                jax.block_until_ready(tok)  # never on the untraced path
         self.num_prefill_steps += 1
         seq.prefill_pos = end
         if end == len(toks):  # prompt fully ingested -> first new token
@@ -295,9 +346,18 @@ class Engine:
             vs[b] = kv_blocks.view_slots(seq.blocks, self.max_blocks_per_seq,
                                          bs)
         last = np.zeros((B,), np.int32)
-        tok, logits, self.kv = self._call_step(
-            self.params, self.kv, tokens, positions, ws, vs, last)
+        with obs.tracer().span("engine.decode_step", cat="serving",
+                               batch=len(active)), \
+                self._step_timer("decode"):
+            tok, logits, self.kv = self._call_step(
+                self.params, self.kv, tokens, positions, ws, vs, last)
+            if obs.tracer().enabled:
+                jax.block_until_ready(tok)
         self.num_decode_steps += 1
+        obs.registry().histogram(
+            "serving_decode_batch_occupancy",
+            help="live rows per decode iteration (of max_slots)",
+            buckets=DEPTH_BUCKETS).observe(len(active))
         for seq in active:
             self._append(seq, self._pick(seq, tok[seq.slot],
                                          logits[seq.slot]), done)
@@ -313,11 +373,23 @@ class Engine:
         scaled = np.asarray(logits, np.float64) / seq.req.temperature
         return int(np.argmax(scaled + rng.gumbel(size=scaled.shape)))
 
+    def _step_timer(self, phase: str):
+        return _StepTimer(self, phase)
+
     def _append(self, seq: Sequence, token: int, done: list) -> None:
         t = self.now
+        reg = obs.registry()
         seq.generated.append(token)
         if seq.t_first_token is None:
             seq.t_first_token = t
+            reg.histogram("serving_ttft_s",
+                          help="time to first token (incl. queueing)"
+                          ).observe(t - seq.t_arrival)
+        elif seq.t_last_token is not None:
+            reg.histogram("serving_intertoken_s",
+                          help="gap between consecutive tokens of one "
+                               "request").observe(t - seq.t_last_token)
+        seq.t_last_token = t
         if self.on_token is not None:
             self.on_token(seq.req.rid, token, detokenize([token]))
         if seq.done:
@@ -325,6 +397,15 @@ class Engine:
             self.scheduler.finish(seq)
             self.finished.append(seq)
             done.append(seq)
+            reg.counter("serving_requests_finished_total",
+                        help="requests run to completion").inc()
+            reg.histogram("serving_request_latency_s",
+                          help="arrival -> last token"
+                          ).observe(t - seq.t_arrival)
+            obs.tracer().instant("request.finish", cat="serving",
+                                 rid=seq.req.rid,
+                                 new_tokens=len(seq.generated),
+                                 preemptions=seq.preemptions)
 
     # --------------------------------------------------------------- run
     def run(self, requests, *, wait_for_arrivals: bool = True
@@ -357,32 +438,62 @@ class Engine:
         return results
 
     def reset_metrics(self) -> None:
-        """Drop finished-request history and step counters (e.g. after a
-        warmup stream) without touching queued/running work."""
+        """Drop finished-request history, step counters, AND the
+        streaming/in-flight aggregates (serving_* registry series: TTFT,
+        inter-token, step-time, queue-depth histograms) — e.g. after a
+        warmup stream — without touching queued/running work."""
         self.finished = []
         self.num_prefill_steps = 0
         self.num_decode_steps = 0
         self.scheduler.num_preemptions = 0
         self.scheduler.num_admitted = 0
+        self.scheduler.num_evicted_blocks = 0
+        obs.registry().reset(prefix="serving_")
+        for seq in self.scheduler.running:
+            seq.t_last_token = None  # warmup gaps must not leak into the
+            # measured stream's first inter-token sample
 
     # ----------------------------------------------------------- metrics
-    def summary(self) -> dict:
-        """Aggregate serving metrics over finished requests."""
+    def metrics(self) -> dict:
+        """Aggregate serving metrics over finished requests.  Every key
+        is always present: with 0 finished requests rates/percentiles
+        are 0.0, with 1 the percentiles are that request's value —
+        never NaN, never a missing key (callers index
+        ``m["tok_per_s"]`` unconditionally)."""
         fin = self.finished
-        out = {"requests": len(fin),
-               "generated_tokens": sum(len(s.generated) for s in fin),
-               "preemptions": self.scheduler.num_preemptions,
-               "prefill_steps": self.num_prefill_steps,
-               "decode_steps": self.num_decode_steps}
-        if fin:
-            span = (max(s.t_finish for s in fin)
-                    - min(s.t_arrival for s in fin))
-            lat = np.array([s.t_finish - s.t_arrival for s in fin])
-            ttft = np.array([s.t_first_token - s.t_arrival for s in fin])
-            out.update(
-                tok_per_s=out["generated_tokens"] / max(span, 1e-9),
-                latency_p50_s=float(np.percentile(lat, 50)),
-                latency_p95_s=float(np.percentile(lat, 95)),
-                ttft_p50_s=float(np.percentile(ttft, 50)),
-                ttft_p95_s=float(np.percentile(ttft, 95)))
-        return out
+
+        def pct(xs, q):
+            if len(xs) == 0:
+                return 0.0
+            if len(xs) == 1:
+                return float(xs[0])
+            return float(np.percentile(np.asarray(xs), q))
+
+        gen = sum(len(s.generated) for s in fin)
+        span = (max(s.t_finish for s in fin)
+                - min(s.t_arrival for s in fin)) if fin else 0.0
+        lat = [s.t_finish - s.t_arrival for s in fin]
+        ttft = [s.t_first_token - s.t_arrival for s in fin
+                if s.t_first_token is not None]
+        inter = obs.registry().histogram("serving_intertoken_s")
+        return {
+            "requests": len(fin),
+            "generated_tokens": gen,
+            "preemptions": self.scheduler.num_preemptions,
+            "evicted_blocks": self.scheduler.num_evicted_blocks,
+            "admitted": self.scheduler.num_admitted,
+            "prefill_steps": self.num_prefill_steps,
+            "decode_steps": self.num_decode_steps,
+            "tok_per_s": gen / span if span > 0 else 0.0,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
+            "intertoken_p50_s": inter.percentile(50),
+            "intertoken_p95_s": inter.percentile(95),
+        }
+
+    def summary(self) -> dict:
+        """Alias of :meth:`metrics` (historic name; keys are a strict
+        superset of what it used to return)."""
+        return self.metrics()

@@ -50,6 +50,9 @@ class Sequence:
     preemptions: int = 0
     t_arrival: float = 0.0
     t_first_token: float | None = None
+    t_last_token: float | None = None  # previous token's emit time —
+    # inter-token gap source; reset on preemption (the re-prefill gap is
+    # queueing, not decode cadence)
     t_finish: float | None = None
 
     @property
@@ -75,6 +78,10 @@ class Sequence:
             out["ttft_s"] = self.t_first_token - self.t_arrival
         if self.t_finish is not None:
             out["latency_s"] = self.t_finish - self.t_arrival
+            if len(self.generated) > 1 and self.t_first_token is not None:
+                out["intertoken_mean_s"] = (
+                    (self.t_finish - self.t_first_token)
+                    / (len(self.generated) - 1))
         return out
 
 

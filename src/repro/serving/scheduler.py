@@ -23,6 +23,7 @@ from __future__ import annotations
 import heapq
 from collections import deque
 
+from repro import obs
 from repro.serving.kv_blocks import BlockPool
 from repro.serving.request import Phase, Sequence
 
@@ -42,6 +43,7 @@ class Scheduler:
         self._seqno = 0
         self.num_admitted = 0
         self.num_preemptions = 0
+        self.num_evicted_blocks = 0
 
     # ------------------------------------------------------------- state
     def has_work(self) -> bool:
@@ -67,6 +69,12 @@ class Scheduler:
             self._seqno += 1
             self.num_admitted += 1
             self.running.append(seq)
+            obs.registry().counter(
+                "serving_admissions_total",
+                help="sequences admitted to a decode slot").inc()
+            obs.tracer().instant("scheduler.admit", cat="serving",
+                                 rid=seq.req.rid, slot=seq.slot,
+                                 blocks=len(seq.blocks))
 
     # -------------------------------------------------------- scheduling
     def schedule(self):
@@ -105,6 +113,18 @@ class Scheduler:
     def preempt(self, victim: Sequence) -> None:
         self.num_preemptions += 1
         victim.preemptions += 1
+        self.num_evicted_blocks += len(victim.blocks)
+        reg = obs.registry()
+        reg.counter("serving_preemptions_total",
+                    help="sequences evicted on pool exhaustion").inc()
+        reg.counter("serving_evicted_blocks_total",
+                    help="KV blocks freed by preemption").inc(
+                        len(victim.blocks))
+        obs.tracer().instant("scheduler.preempt", cat="serving",
+                             rid=victim.req.rid,
+                             blocks=len(victim.blocks),
+                             generated=len(victim.generated))
+        victim.t_last_token = None  # next gap is requeue, not decode cadence
         self.pool.free(victim.blocks)
         victim.blocks = []
         heapq.heappush(self._free_slots, victim.slot)
