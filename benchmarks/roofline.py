@@ -69,7 +69,12 @@ def linear_flops(k: int, m: int, quant: str, d: int = 3,
         d = max(2, C.best_d(m, k, range(2, 5))[0])
         quant = "msgemm"
     if quant == "msgemm" and m >= 16**d / 4:
-        produce = 2.0 * 16**d * k  # MXU matmul vs B_d (per activation col)
+        from repro.obs import costs as _costs
+
+        # Eq. 9 shared-prefix table build (sum_{i<=d} 16^i per chunk,
+        # k/d chunks) — see obs.costs.produce_table_ops; the old
+        # 2*16^d*k form overcounted produce linearly in d
+        produce = 2.0 * _costs.produce_table_ops(d) * (k / d)
         consume = m * (k / d)  # table adds (paper Eq. 9)
         return (produce, consume) if split else produce + consume
     # dense / int4_dequant / msgemm-with-tiny-m (expert policy: falls back
@@ -91,8 +96,10 @@ def linear_weight_bytes(k: int, m: int, quant: str, d: int = 3,
 def lut_bytes(k: int, b: int, d: int = 3) -> float:
     """Transient LUT write+read traffic per linear for a b-column GeMM —
     the §4 'kept in cache' assumption, priced at HBM rates when it
-    doesn't fit VMEM."""
-    return 2 * 16**d * (k / d) * b * 4.0
+    doesn't fit VMEM (obs.costs.lut_bytes is the shared formula)."""
+    from repro.obs import costs as _costs
+
+    return _costs.lut_bytes(k, b, d)
 
 
 def _block_linears(cfg: ModelConfig, kind: str):
@@ -406,6 +413,79 @@ def kernel_fraction(measured_s: float, m: int, k: int, b: int,
         costs.device(backend))
 
 
+def kernel_report(bench_path: str | None = None,
+                  calibration_path: str | None = None) -> list[dict]:
+    """Per-shape measured-vs-attainable report from BENCH_kernels.json.
+
+    One row per (shape, grid) with the measured kernel time, the
+    roofline-attainable time for the device the bench ran on
+    (obs.costs), the achieved fraction of that bound, and — when a
+    perf-model calibration matching the bench's (device, interpret)
+    partition is available — the calibrated model's predicted wall time
+    and the measured/predicted ratio (the same ratio the regression
+    sentinel gates on)."""
+    from repro.obs import costs, perfmodel as pm
+
+    bench_path = bench_path or os.path.join(
+        os.path.dirname(__file__), "results", "BENCH_kernels.json")
+    try:
+        with open(bench_path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return []
+    dev_name = doc.get("device", "cpu")
+    dev = costs.DEVICES.get(dev_name, costs.DEVICES["cpu"])
+    interpret = bool(doc.get("interpret", dev_name != "tpu"))
+    calib = pm.load_calibration(calibration_path, device=dev_name,
+                                interpret=interpret)
+    rows = []
+    for s in pm.samples_from_bench(bench_path):
+        attain = costs.attainable_s(
+            costs.gemm_cost(s.m, s.k, s.b, quant="msgemm", d=s.d), dev)
+        row = {
+            "source": s.source, "backend": s.backend,
+            "m": s.m, "k": s.k, "b": s.b, "d": s.d,
+            "grid": "vmem-acc" if s.acc_in_vmem else "legacy",
+            "measured_s": s.measured_s,
+            "attainable_s": attain,
+            "attainable_fraction": attain / s.measured_s,
+            "device": dev_name, "interpret": interpret,
+        }
+        if calib is not None:
+            pred = pm.predict_sample(s, calib).t_total_s
+            row["predicted_s"] = pred
+            row["measured_over_predicted"] = s.measured_s / max(pred, 1e-12)
+        rows.append(row)
+    return rows
+
+
+def render_kernel_markdown(rows: list[dict]) -> str:
+    if not rows:
+        return ("(no BENCH_kernels.json — run "
+                "benchmarks/kernel_microbench.py first)")
+    calibrated = any("predicted_s" in r for r in rows)
+    hdr = "| shape | grid | measured | attainable | % of peak |"
+    sep = "|---|---|---|---|---|"
+    if calibrated:
+        hdr += " model pred | meas/pred |"
+        sep += "---|---|"
+    out = [f"device={rows[0]['device']} interpret={rows[0]['interpret']} "
+           f"(interpret-mode fractions are orders below hardware peak "
+           f"by construction)", "", hdr, sep]
+    for r in rows:
+        line = (f"| m{r['m']} k{r['k']} b{r['b']} d{r['d']} | {r['grid']} "
+                f"| {r['measured_s']:.3e}s | {r['attainable_s']:.3e}s | "
+                f"{100 * r['attainable_fraction']:.2f}% |")
+        if calibrated:
+            if "predicted_s" in r:
+                line += (f" {r['predicted_s']:.3e}s | "
+                         f"{r['measured_over_predicted']:.2f}x |")
+            else:
+                line += " — | — |"
+        out.append(line)
+    return "\n".join(out)
+
+
 def load_dryrun(arch: str, shape: str, mesh: str = "single",
                 quant: str = "auto") -> dict | None:
     if quant == "auto":
@@ -451,17 +531,24 @@ def render_markdown(rows: list[dict]) -> str:
 
 
 def main():
+    res = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(res, exist_ok=True)
     rows = full_table()
     md = render_markdown(rows)
-    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
-                exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "results",
-                           "roofline.md"), "w") as f:
+    with open(os.path.join(res, "roofline.md"), "w") as f:
         f.write(md + "\n")
-    with open(os.path.join(os.path.dirname(__file__), "results",
-                           "roofline.json"), "w") as f:
+    with open(os.path.join(res, "roofline.json"), "w") as f:
         json.dump(rows, f, indent=1, default=float)
     print(md)
+    krows = kernel_report()
+    if krows:
+        kmd = render_kernel_markdown(krows)
+        with open(os.path.join(res, "roofline_kernels.md"), "w") as f:
+            f.write(kmd + "\n")
+        with open(os.path.join(res, "roofline_kernels.json"), "w") as f:
+            json.dump(krows, f, indent=1, default=float)
+        print()
+        print(kmd)
 
 
 if __name__ == "__main__":

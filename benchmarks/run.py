@@ -31,6 +31,20 @@ def _roofline_lines() -> list[str]:
             f"collective_s={t['collective_s']:.4f} "
             f"frac={r['roofline_fraction']:.3f} "
             f"mem_gb={r.get('mem_per_dev_gb', -1)}")
+    # per-kernel measured-vs-attainable rows (needs a prior `kernels`
+    # suite run to have written BENCH_kernels.json)
+    try:
+        for r in roofline.kernel_report():
+            extra = (f" pred_us={r['predicted_s'] * 1e6:.1f}"
+                     f" meas_over_pred={r['measured_over_predicted']:.2f}"
+                     if "predicted_s" in r else "")
+            lines.append(
+                f"roofline/kernel/m{r['m']}_k{r['k']}_b{r['b']}_"
+                f"{r['grid']},{r['measured_s'] * 1e6:.1f},"
+                f"attainable_us={r['attainable_s'] * 1e6:.1f} "
+                f"frac={r['attainable_fraction']:.4f}{extra}")
+    except Exception as e:
+        lines.append(f"roofline/kernels_unavailable,0.0,{type(e).__name__}")
     return lines
 
 

@@ -100,7 +100,8 @@ def _queue_depth() -> dict:
             return {"samples": h.count,
                     "mean": h.sum / h.count if h.count else 0.0,
                     "max": h.max if h.count else 0.0,
-                    "p50": h.percentile(50), "p95": h.percentile(95)}
+                    "p50": h.percentile(50) or 0.0,
+                    "p95": h.percentile(95) or 0.0}
     return {"samples": 0, "mean": 0.0, "max": 0.0, "p50": 0.0, "p95": 0.0}
 
 

@@ -141,7 +141,10 @@ def execute(params: dict, x, cfg, *, in_dim: int | None = None,
         # a sharded plan without a live mesh (explicit override outside
         # sharding.use): fall through and run unsharded on local math
     mark = f"gemm.{be.name}.m{m}.k{k}.b{batch}"
-    labels = {"backend": be.name, "m": m, "k": k, "b": batch}
+    # mode/d/sb make the series self-describing for the perf-model
+    # regression sentinel (obs.perfmodel.samples_from_snapshot)
+    labels = {"backend": be.name, "m": m, "k": k, "b": batch,
+              "mode": spec.mode, "d": d, "sb": spec.scale_block}
     x = obs.jit_begin(x, mark)
     if fuse:
         y = be.run(spec, p, params, x, k=k, precision=precision,

@@ -61,6 +61,9 @@ _PLAN_FIELDS = ("backend", "tm", "tj", "tb", "consume_chunk",
 # second run of a cached shape does zero timing)
 num_timed_candidates = 0
 
+# how many predicted-best candidates the model-guided search measures
+MODEL_TOP_K = 3
+
 
 def default_cache_path() -> Path:
     env = os.environ.get("REPRO_PLAN_CACHE")
@@ -277,11 +280,39 @@ def _time_plan(backend: registry.Backend, spec: QuantSpec, p: ExecPlan,
     return best
 
 
+# ------------------------------------------------------- model pruning
+def _model_prune(cands: list[ExecPlan], spec: QuantSpec, d: int, m: int,
+                 k: int, batch: int, backend: str, base: ExecPlan,
+                 calib) -> list[ExecPlan]:
+    """Rank candidates by the calibrated perf model's predicted time and
+    keep only the predicted-best ``MODEL_TOP_K``.  The heuristic base
+    plan is always in the measured set (replacing the last pick when the
+    model ranks it out), so model-guided tuning can only match or beat
+    the heuristic — a badly extrapolating calibration costs tuning
+    quality, never correctness or a worse-than-default plan."""
+    from repro.obs import perfmodel
+
+    def pred(p: ExecPlan) -> float:
+        feats = perfmodel.features(
+            backend, spec.mode, max(d, 1), spec.scale_block, m, k, batch,
+            tm=p.tm, tj=p.tj, tb=p.tb, consume_chunk=p.consume_chunk,
+            acc_in_vmem=p.acc_in_vmem)
+        return perfmodel.predict_features(feats, calib,
+                                          backend=backend).t_total_s
+
+    ranked = sorted(cands, key=pred)
+    keep = ranked[:MODEL_TOP_K]
+    if base not in keep:
+        keep[-1] = base
+    return keep
+
+
 # -------------------------------------------------------------- autotune
 def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
              device: str | None = None, interpret: bool | None = None,
              acc_dtype: str = "float32", reps: int = 2,
-             persist: bool = True, tag: str = "-") -> ExecPlan:
+             persist: bool = True, tag: str = "-",
+             search: str = "auto") -> ExecPlan:
     """Measure candidates for one shape key; cache and return the winner.
 
     ``m/k/batch`` are the shapes the backend will actually execute on
@@ -289,6 +320,15 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
     the *local-shard* shapes and the matching mesh/shard ``tag``, so
     candidates are synthesized and timed at exactly the per-device size
     and the winner is keyed to that mesh shape.
+
+    ``search`` selects the sweep: ``'full'`` measures every candidate;
+    ``'model'``/``'auto'`` rank candidates with the calibrated analytic
+    perf model (obs.perfmodel) and measure only the predicted-best
+    ``MODEL_TOP_K`` (heuristic base always included).  When no
+    calibration matching this (device, interpret) partition exists, both
+    fall back to the full sweep (``dispatch_autotune_model_fallback_total``
+    counts these; ``dispatch_autotune_model_pruned_total`` counts the
+    candidates a model-guided run skipped).
 
     Returns the cached plan immediately when the key is known (from this
     process or a previous one via the JSON file)."""
@@ -300,25 +340,51 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
     if hit is not None:
         # interpret is runtime policy, never part of the cached tuning
         return dataclasses.replace(hit, interpret=interpret)
+    pol = ExecPolicy(interpret=interpret, acc_dtype=acc_dtype)
     if not be.tunable:
-        return heuristic_plan(spec, d, m, k, batch, backend,
-                              ExecPolicy(interpret=interpret,
-                                         acc_dtype=acc_dtype))
+        return heuristic_plan(spec, d, m, k, batch, backend, pol)
     cands = candidate_plans(spec, d, m, k, batch, backend, interpret,
                             acc_dtype)
+    # the partition every timing row in this run belongs to — persisted
+    # per row so calibration never mixes interpreter and compiled times
+    from repro.obs import perfmodel
+
+    eff_interpret = perfmodel.effective_interpret(interpret)
+    pruned = 0
+    if search in ("model", "auto") and len(cands) > MODEL_TOP_K:
+        calib = perfmodel.load_calibration(device=device,
+                                           interpret=eff_interpret)
+        reg = obs.registry()
+        if calib is None:
+            reg.counter("dispatch_autotune_model_fallback_total",
+                        help="model-guided searches that fell back to "
+                             "the full sweep (no matching calibration)",
+                        backend=backend).inc()
+        else:
+            base = heuristic_plan(spec, d, m, k, batch, backend, pol)
+            kept = _model_prune(cands, spec, d, m, k, batch, backend,
+                                base, calib)
+            pruned = len(cands) - len(kept)
+            cands = kept
+            reg.counter("dispatch_autotune_model_pruned_total",
+                        help="candidates skipped by model-guided search",
+                        backend=backend).inc(pruned)
     params, x = _synthetic_call(spec, d, m, k, batch)
     with obs.tracer().span("autotune", cat="dispatch", key=key,
-                           candidates=len(cands)):
+                           candidates=len(cands), model_pruned=pruned):
         timed = [(_time_plan(be, spec, p, params, x, k, reps), i, p)
                  for i, p in enumerate(cands)]
     best_s, best_i, winner = min(timed)
     winner = dataclasses.replace(winner, source="autotuned")
     # candidate timings ride along in the cache JSON instead of being
     # discarded — they are the calibration data for the analytic perf
-    # model (ROADMAP item 3) and make regressions diffable across runs
+    # model (obs.perfmodel) and make regressions diffable across runs.
+    # 'interpret'/'device' tag the partition each row was measured under
+    # (additive; readers skip untagged pre-tag rows).
     rows = [{"s": t, "tm": p.tm, "tj": p.tj, "tb": p.tb,
              "consume_chunk": p.consume_chunk,
-             "acc_in_vmem": p.acc_in_vmem, "winner": i == best_i}
+             "acc_in_vmem": p.acc_in_vmem, "winner": i == best_i,
+             "interpret": eff_interpret, "device": device}
             for t, i, p in sorted(timed)]
     cache().put(key, winner, persist=persist, timings=rows)
     # same contract as a cache hit: the caller's interpret overlays the
@@ -353,10 +419,12 @@ def warm(requests, *, policy: ExecPolicy | None = None,
         key = plan_key(backend, spec, d, lm, lk, lb, device,
                        policy.acc_dtype, tag)
         if policy.autotune and registry.get_backend(backend).tunable:
+            search = (policy.autotune
+                      if policy.autotune in ("model", "full") else "auto")
             p = autotune(spec, lm, lk, lb, backend, device=device,
                          interpret=policy.interpret,
                          acc_dtype=policy.acc_dtype, persist=persist,
-                         tag=tag)
+                         tag=tag, search=search)
         else:
             hit = cache().get(key)
             p = hit if hit is not None else heuristic_plan(

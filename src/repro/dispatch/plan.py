@@ -98,7 +98,11 @@ class ExecPolicy:
     interpret / consume_chunk / acc_dtype : forwarded into heuristic
         plans (acc_dtype also keys the autotune cache).
     autotune : measure candidate tile configs for unseen shape keys and
-        persist winners to the plan cache.
+        persist winners to the plan cache.  ``True`` uses the analytic
+        perf model to prune the candidate sweep when a matching
+        calibration exists (falling back to the full sweep otherwise);
+        ``'full'`` always measures every candidate, ``'model'`` requires
+        the model-guided path.  ``False`` disables tuning.
     shard_collective : how k-sharded (row-parallel) linears resolve
         their partial sums under a mesh: 'psum' | 'reduce_scatter'
         (see dispatch.shard.ShardSpec).
@@ -109,7 +113,7 @@ class ExecPolicy:
     interpret: bool | None = None
     consume_chunk: int = 1
     acc_dtype: str = "float32"
-    autotune: bool = False
+    autotune: bool | str = False
     shard_collective: str = "psum"
     plan: ExecPlan | None = None
 
@@ -119,6 +123,9 @@ class ExecPolicy:
         if self.acc_dtype not in ACC_DTYPES:
             raise ValueError(f"acc_dtype={self.acc_dtype!r} must be one of "
                              f"{ACC_DTYPES}")
+        if self.autotune not in (False, True, "model", "full"):
+            raise ValueError(f"autotune={self.autotune!r} must be one of "
+                             f"False, True, 'model', 'full'")
         if self.shard_collective not in COLLECTIVES:
             raise ValueError(f"shard_collective={self.shard_collective!r} "
                              f"must be one of {COLLECTIVES}")
@@ -343,10 +350,13 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
         return replace(cached, interpret=policy.interpret, shard=shard)
 
     if policy.autotune and be.tunable and not _tracing_active():
+        search = (policy.autotune
+                  if policy.autotune in ("model", "full") else "auto")
         return replace(
             at.autotune(spec, lm, lk, lb, be.name, device=device,
                         interpret=policy.interpret,
-                        acc_dtype=policy.acc_dtype, tag=tag),
+                        acc_dtype=policy.acc_dtype, tag=tag,
+                        search=search),
             shard=shard)
     return replace(heuristic_plan(spec, d, lm, lk, lb, be.name, policy),
                    shard=shard)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -52,6 +53,35 @@ def build_model(args):
         cfg = cfg.replace(quant=spec)
         print(f"[serve] quantized weights to {args.quant} (d={args.d})")
     return params, cfg, key
+
+
+def check_run_regressions(args) -> None:
+    """Run the perf-model regression sentinel over this run's measured
+    ``kernel_gemm_s`` series (obs.perfmodel).  SystemExit(1) when any
+    kernel ran slower than the tolerance band allows; a missing or
+    mismatched calibration skips with a note (a fresh machine should
+    serve, not crash — CI pins a calibration and relies on the exit
+    code)."""
+    from repro.obs import perfmodel as pm
+
+    cal = pm.load_calibration(args.calibration)
+    if cal is None:
+        path = args.calibration or pm.default_calibration_path()
+        print(f"[serve] check-regressions: no calibration matching this "
+              f"device/interpret partition at {path}; skipped "
+              f"(python -m repro.obs --calibrate)", file=sys.stderr)
+        return
+    samples = pm.samples_from_registry()
+    report = pm.check_regressions(samples, cal)
+    print(pm.render_report(report))
+    if not report["n_samples"]:
+        print("[serve] check-regressions: no kernel_gemm_s samples "
+              "recorded (is tracing on?)", file=sys.stderr)
+    elif not report["ok"]:
+        raise SystemExit(
+            f"[serve] check-regressions: {report['n_outliers']} kernel "
+            f"timing(s) exceeded {report['tolerance']:g}x the model "
+            f"prediction")
 
 
 def exec_policy(args) -> dispatch.ExecPolicy | None:
@@ -220,9 +250,13 @@ def main(argv=None):
                     choices=["auto"] + dispatch.backend_names(),
                     help="force a registered execution backend "
                          "(auto: capability+priority selection)")
-    ap.add_argument("--autotune", action="store_true",
+    ap.add_argument("--autotune", nargs="?", const=True, default=False,
+                    choices=["model", "full"], metavar="MODE",
                     help="time candidate tile configs per linear shape and "
-                         "persist winners to the plan cache")
+                         "persist winners to the plan cache; bare flag "
+                         "auto-selects model-guided search when a perf-model "
+                         "calibration exists, '=model'/'=full' force the "
+                         "pruned/exhaustive sweep")
     ap.add_argument("--autotune-cache", default=None,
                     help="plan-cache JSON path (default: REPRO_PLAN_CACHE "
                          "env or ~/.cache/msgemm-repro/plans.json)")
@@ -249,6 +283,15 @@ def main(argv=None):
     ap.add_argument("--prom-port", type=int, default=0,
                     help="expose /metrics in Prometheus text format on "
                          "this port for the lifetime of the run")
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="after the run, compare measured kernel times "
+                         "against the calibrated perf model "
+                         "(obs.perfmodel); exit 1 on outliers — implies "
+                         "tracing so kernel timings are recorded")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="perf-model calibration.json for "
+                         "--check-regressions (default: "
+                         "$REPRO_CALIBRATION or the user cache dir)")
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import force_host_devices
@@ -259,7 +302,9 @@ def main(argv=None):
     # tracing must be on BEFORE the engine builds/compiles: jit marks are
     # staged at trace time, so a later enable would record host spans but
     # no in-graph gemm/collective events
-    if args.trace_out:
+    if args.trace_out or args.check_regressions:
+        # the sentinel reads kernel_gemm_s series, which only exist when
+        # the in-graph jit marks were staged at trace time
         obs.enable_tracing(clear=True)
     prom = None
     if args.prom_port:
@@ -270,17 +315,23 @@ def main(argv=None):
     try:
         params, cfg, key = build_model(args)
         if args.engine == "continuous":
-            return run_continuous(args, params, cfg, mesh)
-        if args.autotune_cache is not None:
-            dispatch.set_cache_path(args.autotune_cache)
-        if mesh is not None:
-            params = jax.device_put(
-                params, shd.shardings(params, mesh, args.mesh_rules))
-            with shd.use(mesh, args.mesh_rules), \
-                    dispatch.using_policy(exec_policy(args)):
-                return run_static(args, params, cfg, key)
-        with dispatch.using_policy(exec_policy(args)):
-            return run_static(args, params, cfg, key)
+            out = run_continuous(args, params, cfg, mesh)
+        else:
+            if args.autotune_cache is not None:
+                dispatch.set_cache_path(args.autotune_cache)
+            if mesh is not None:
+                params = jax.device_put(
+                    params, shd.shardings(params, mesh, args.mesh_rules))
+                with shd.use(mesh, args.mesh_rules), \
+                        dispatch.using_policy(exec_policy(args)):
+                    out = run_static(args, params, cfg, key)
+            else:
+                with dispatch.using_policy(exec_policy(args)):
+                    out = run_static(args, params, cfg, key)
+        if args.check_regressions:
+            jax.effects_barrier()  # flush kernel timing callbacks
+            check_run_regressions(args)
+        return out
     finally:
         if args.trace_out:
             jax.effects_barrier()  # flush in-flight debug callbacks

@@ -19,6 +19,7 @@ zero-overhead assertions).
 """
 
 from repro.obs import costs  # noqa: F401  (re-export module)
+from repro.obs import perfmodel  # noqa: F401  (re-export module)
 from repro.obs.metrics import (  # noqa: F401
     Registry,
     SNAPSHOT_SCHEMA_VERSION,
@@ -46,5 +47,5 @@ __all__ = [
     "Tracer", "tracer", "enable_tracing", "disable_tracing",
     "jit_begin", "jit_end",
     "validate_trace", "validate_trace_file", "TRACE_SCHEMA_VERSION",
-    "costs",
+    "costs", "perfmodel",
 ]

@@ -49,23 +49,55 @@ def device(backend: str | None = None) -> Device:
     return DEVICES.get(backend, DEVICES["cpu"])
 
 
+def produce_table_ops(d: int) -> float:
+    """Eq.-9 op count to build ONE d-digit LUT column (16^d entries)
+    from one d-wide activation chunk.
+
+    The table is built hierarchically: every i-digit prefix table is
+    shared by all 16^(d-i) extensions, so level i costs 16^i adds and
+    the whole build costs sum_{i=1..d} 16^i ~= 16^d * 16/15 — NOT
+    16^d * d.  (The previous formula priced every entry as d
+    independent multiply-adds, overcounting produce work — and the
+    matching transient LUT traffic — by a factor that grows linearly
+    in d; the overcount is what made d > 2 look produce-bound.)
+    """
+    return float(sum(16 ** i for i in range(1, d + 1)))
+
+
+def lut_bytes(k: int, b: int, d: int = 3) -> float:
+    """Transient LUT write+read traffic for one (k, b) produce phase,
+    priced at HBM rates: 16^d entries per d-wide chunk, k/d chunks, b
+    columns, f32.  The fused Pallas deployment keeps these tiles in
+    VMEM (paper §4), so :func:`gemm_cost` reports this separately
+    instead of folding it into ``bytes``."""
+    return 2 * 16 ** d * (k / d) * b * 4.0
+
+
 def gemm_cost(m: int, k: int, b: int, *, quant: str = "msgemm",
               d: int = 3, dtype_bytes: float = 2.0) -> dict:
     """Cost of one (b, k) x (k, m) GeMM invocation.
 
-    Returns produce/consume op counts (paper Eq. 9 accounting), bytes
+    Returns produce/consume op counts (paper Eq. 9 accounting — the
+    shared-prefix table build, see :func:`produce_table_ops`), bytes
     moved through main memory, and the arithmetic totals the roofline
     fraction divides by.  ``quant`` other than msgemm prices the dense
-    path (produce = the whole matmul, consume = 0).
+    path (produce = the whole matmul, consume = 0).  ``lut_bytes`` is
+    the transient LUT spill traffic for deployments whose LUT does NOT
+    stay in VMEM; it is reported but excluded from ``bytes`` (the fused
+    kernels never move it through HBM).
     """
     if quant == "msgemm":
-        produce = 2.0 * 16**d * k * b          # LUT build: MXU matmul
+        # Eq. 9: shared tuple-table build per d-wide chunk (adds +
+        # 16 b(i)*x products per digit, the latter negligible)
+        produce = 2.0 * produce_table_ops(d) * (k / d) * b
         consume = float(m) * (k / d) * b       # table adds (VPU)
         weight_bytes = (32 / d) / 8 * m * k    # packed digit indices
+        lutb = lut_bytes(k, b, d)
     else:
         produce = 2.0 * m * k * b
         consume = 0.0
         weight_bytes = dtype_bytes * m * k
+        lutb = 0.0
     act_bytes = dtype_bytes * b * k
     out_bytes = dtype_bytes * b * m
     return {
@@ -75,6 +107,7 @@ def gemm_cost(m: int, k: int, b: int, *, quant: str = "msgemm",
         "flops": produce + consume,
         "bytes": weight_bytes + act_bytes + out_bytes,
         "weight_bytes": weight_bytes,
+        "lut_bytes": lutb,
     }
 
 

@@ -128,13 +128,16 @@ class Histogram:
                 if j < RESERVOIR_CAP:
                     self._samples[j] = v
 
-    def percentile(self, q: float) -> float:
-        """q in [0, 100]; 0.0 when empty (never raises — serving
-        summaries with 0 or 1 samples must stay well-formed)."""
+    def percentile(self, q: float) -> float | None:
+        """q in [0, 100]; ``None`` when the reservoir is empty (never
+        raises — a snapshot taken before any observation reports null
+        percentiles rather than a fabricated 0.0, and serving summaries
+        with 0 or 1 samples must stay well-formed).  Callers that need
+        a number coalesce: ``h.percentile(50) or 0.0``."""
         with self._lock:
             xs = sorted(self._samples)
         if not xs:
-            return 0.0
+            return None
         if len(xs) == 1:
             return xs[0]
         pos = (q / 100.0) * (len(xs) - 1)
@@ -154,6 +157,8 @@ class Histogram:
                 "count": self.count, "sum": self.sum,
                 "min": self.min if self.count else 0.0,
                 "max": self.max if self.count else 0.0,
+                # null (not 0.0) before the first observation — see
+                # percentile(); validate_snapshot accepts both
                 "p50": self.percentile(50), "p90": self.percentile(90),
                 "p95": self.percentile(95), "p99": self.percentile(99),
                 "buckets": buckets}
@@ -309,6 +314,18 @@ def validate_snapshot(doc: dict) -> list[str]:
                                 f"missing {f!r}")
             if not isinstance(row.get("labels", {}), dict):
                 errs.append(f"{kind}[{i}] labels not an object")
+            if kind == "histograms":
+                # percentiles are numbers, or null for an empty series
+                # (a snapshot taken before any observation)
+                for f in ("p50", "p90", "p95", "p99"):
+                    if f in row and not isinstance(
+                            row[f], (int, float, type(None))):
+                        errs.append(f"{kind}[{i}] ({row.get('name')}) "
+                                    f"{f} is {type(row[f]).__name__}, "
+                                    "expected number or null")
+                if row.get("count") and row.get("p50") is None:
+                    errs.append(f"{kind}[{i}] ({row.get('name')}) has "
+                                "observations but null p50")
     return errs
 
 

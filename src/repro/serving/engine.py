@@ -117,7 +117,7 @@ class Engine:
                  max_model_len: int | None = None, prefill_chunk: int = 16,
                  cache_dtype=jnp.float32, on_token=None,
                  clock=time.perf_counter, sample_seed: int = 0,
-                 backend: str | None = None, autotune: bool = False,
+                 backend: str | None = None, autotune: bool | str = False,
                  autotune_cache=None, mesh=None, mesh_rules: str = "serve",
                  shard_collective: str = "psum"):
         self.mesh = mesh
@@ -489,8 +489,10 @@ class Engine:
             "latency_p95_s": pct(lat, 95),
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
-            "intertoken_p50_s": inter.percentile(50),
-            "intertoken_p95_s": inter.percentile(95),
+            # percentile() is None on an empty reservoir; this summary
+            # promises plain 0.0 for "nothing measured yet"
+            "intertoken_p50_s": inter.percentile(50) or 0.0,
+            "intertoken_p95_s": inter.percentile(95) or 0.0,
         }
 
     def summary(self) -> dict:

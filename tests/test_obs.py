@@ -54,7 +54,9 @@ def test_registry_reset_prefix():
 def test_histogram_percentile_edge_cases():
     reg = Registry()
     h = reg.histogram("t_s")
-    assert h.percentile(50) == 0.0  # empty: never raises
+    assert h.percentile(50) is None  # empty: null, never raises
+    empty = h.as_dict()
+    assert empty["p50"] is None and empty["p95"] is None
     h.observe(0.25)
     assert h.percentile(50) == h.percentile(95) == 0.25  # single sample
     for v in (0.1, 0.2, 0.3, 0.4):
@@ -63,6 +65,25 @@ def test_histogram_percentile_edge_cases():
     d = h.as_dict()
     assert d["count"] == 5 and d["buckets"]["+Inf"] == 5
     assert d["min"] == 0.1 and d["max"] == 0.4
+
+
+def test_snapshot_accepts_null_percentiles():
+    """A snapshot taken before any observation carries null percentiles
+    for the empty histogram — the validator accepts them (and still
+    rejects non-numeric junk, and null p50 on a non-empty series)."""
+    reg = Registry()
+    reg.histogram("t_empty_s")  # created, never observed
+    snap = reg.snapshot()
+    row = snap["histograms"][0]
+    assert row["count"] == 0 and row["p50"] is None
+    assert obs.validate_snapshot(snap) == []
+    assert obs.validate_snapshot(json.loads(json.dumps(snap))) == []
+    bad = json.loads(json.dumps(snap))
+    bad["histograms"][0]["p95"] = "oops"
+    assert any("p95" in e for e in obs.validate_snapshot(bad))
+    bad2 = json.loads(json.dumps(snap))
+    bad2["histograms"][0]["count"] = 3
+    assert any("null p50" in e for e in obs.validate_snapshot(bad2))
 
 
 def test_snapshot_roundtrip_and_validation(tmp_path):
@@ -192,12 +213,40 @@ def test_tracing_off_is_zero_overhead():
 
 
 # ----------------------------------------------------------- cost model
+def test_costs_eq9_produce_pinned_d124():
+    """Eq.-9 produce accounting: the d-digit tuple table is built from
+    shared lower-order prefix tables — sum_{i<=d} 16^i adds per d-wide
+    chunk, NOT 16^d * d (the old formula scaled the shared build — and
+    the matching transient LUT traffic — linearly in d)."""
+    from repro.obs import costs
+
+    k, b = 960, 8  # divisible by 1, 2, 4
+    for d, table_ops in ((1, 16), (2, 16 + 256),
+                         (4, 16 + 256 + 4096 + 65536)):
+        assert costs.produce_table_ops(d) == table_ops
+        cost = costs.gemm_cost(512, k, b, quant="msgemm", d=d)
+        assert cost["produce_flops"] == 2.0 * table_ops * (k / d) * b
+        assert cost["consume_ops"] == 512 * (k / d) * b
+        # LUT spill traffic: table entries (16^d per chunk) written +
+        # read at f32 — table *size* is unaffected by the shared build
+        assert cost["lut_bytes"] == 2 * 16**d * (k / d) * b * 4.0
+        assert cost["lut_bytes"] not in (0,) and \
+            cost["lut_bytes"] + cost["bytes"] > cost["bytes"]
+    # d=1 has no shared prefixes: old and new formulas coincide
+    c1 = costs.gemm_cost(512, k, b, quant="msgemm", d=1)
+    assert c1["produce_flops"] == 2 * 16 * k * b
+    # the d=4 overcount the fix removes was ~3.75x (65536*4 / 69904)
+    c4 = costs.gemm_cost(512, k, b, quant="msgemm", d=4)
+    assert c4["produce_flops"] < 2 * 16**4 * k * b / 3
+
+
 def test_costs_roofline_annotation():
     from repro.obs import costs
 
     cost = costs.gemm_cost(2048, 768, 8, quant="msgemm", d=3)
-    # paper Eq. 9: produce = 2 * 16^d * k * b MXU flops
-    assert cost["produce_flops"] == 2 * 16**3 * 768 * 8
+    # paper Eq. 9: shared-prefix table build per d-wide chunk
+    assert cost["produce_flops"] == \
+        2 * (16 + 16**2 + 16**3) * (768 / 3) * 8
     assert cost["consume_ops"] == 2048 * (768 // 3) * 8
     row = costs.annotate(1e-3, 2048, 768, 8, quant="msgemm", d=3,
                          dev=costs.DEVICES["cpu"])
