@@ -43,7 +43,12 @@ SHARD_JSON = Path(__file__).parent / "results" / "BENCH_shard.json"
 #       admitted + intertoken percentiles (engine.metrics()), and a
 #       "queue_depth" block sampled each scheduler step via the obs
 #       registry
-BENCH_SERVE_SCHEMA = 2
+#   3 — quantized KV cache (repro.kvq): every continuous run gains
+#       kv_bits / kv_bytes_per_token / kv_pool_bytes / max_resident_seqs,
+#       the arrival-rate sweep also sweeps kv_bits {16, 8, 4}, and a new
+#       "capacity" block measures max resident sequences before first
+#       preemption at a FIXED pool-byte budget per kv_bits
+BENCH_SERVE_SCHEMA = 3
 
 CFG = ModelConfig(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
                   d_ff=1024, vocab_size=8192, max_seq_len=512)
@@ -105,37 +110,104 @@ def _queue_depth() -> dict:
     return {"samples": 0, "mean": 0.0, "max": 0.0, "p50": 0.0, "p95": 0.0}
 
 
+def _kv_spec(kv_bits: int):
+    from repro import kvq
+
+    return None if kv_bits == 16 else kvq.KVQuantSpec(bits=kv_bits)
+
+
+def _kv_fields(eng, kv_bits: int) -> dict:
+    """The schema-3 per-run KV columns."""
+    from repro import kvq
+
+    spec = eng.cfg.kv_quant
+    return {"kv_bits": kv_bits,
+            "kv_bytes_per_token": kvq.bytes_per_token(eng.cfg, spec),
+            "kv_pool_bytes": kvq.pool_bytes(eng.cfg, eng.pool.num_blocks,
+                                            eng.block_size, spec),
+            "max_resident_seqs": eng.max_resident_seqs}
+
+
+def _capacity(params, n=24, prompt=16, new_tokens=8) -> tuple[dict, list]:
+    """Max resident sequences before the first preemption at a FIXED
+    pool-byte budget, per kv_bits — the headline capacity claim: the
+    budget buys 13 full-precision blocks, and the quantized pools spend
+    the same bytes on proportionally more blocks (schema 3).
+
+    Every request is prompt+new = 3 blocks; kv16 fits ~4 resident
+    sequences, kv4 fits all 24 — asserted >= 2x kv16."""
+    from repro import kvq
+    from repro.serving import Engine, poisson_stream
+
+    budget = 13 * 8 * kvq.bytes_per_token(CFG, None)  # 13 f32 blocks
+    rows = []
+    lines = []
+    for kv_bits in (16, 8, 4):
+        eng = Engine(params, CFG, max_slots=n, block_size=8,
+                     prefill_chunk=16, max_model_len=prompt + new_tokens,
+                     kv_quant=_kv_spec(kv_bits), kv_pool_bytes=budget)
+        eng.run(poisson_stream(n, CFG.vocab_size,
+                               max_new_tokens=new_tokens, rate=0.0,
+                               min_prompt=prompt, max_prompt=prompt,
+                               seed=5))
+        s = eng.metrics()
+        row = {"requests": n, "pool_blocks": eng.pool.num_blocks,
+               "preemptions": s["preemptions"],
+               "tok_per_s": s["tok_per_s"], **_kv_fields(eng, kv_bits)}
+        rows.append(row)
+        lines.append(
+            f"serve_throughput/capacity/kv{kv_bits},0.0,"
+            f"max_resident={row['max_resident_seqs']} "
+            f"blocks={row['pool_blocks']} "
+            f"bytes_per_token={row['kv_bytes_per_token']} "
+            f"preemptions={row['preemptions']}")
+    by_bits = {r["kv_bits"]: r for r in rows}
+    ratio = (by_bits[4]["max_resident_seqs"]
+             / max(1, by_bits[16]["max_resident_seqs"]))
+    if ratio < 2.0:
+        raise SystemExit(
+            f"kv4 resident-sequence multiplier {ratio:.2f}x vs kv16 at "
+            f"equal pool bytes — expected >= 2x")
+    cap = {"pool_byte_budget": budget, "prompt_tokens": prompt,
+           "new_tokens": new_tokens, "kv4_resident_multiplier": ratio,
+           "runs": rows}
+    lines.append(f"serve_throughput/capacity/kv4_multiplier,0.0,"
+                 f"{ratio:.2f}x")
+    return cap, lines
+
+
 def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
                 ) -> list[str]:
     """Continuous-batching engine at several simulated arrival rates
-    (rate 0 = closed batch: everything queued at t=0).  A warmup stream
-    triggers both jit compiles (prefill + decode shapes) per engine
-    before the measured run, so the JSON tracks serving throughput, not
-    XLA compile time."""
+    (rate 0 = closed batch: everything queued at t=0), with the msgemm
+    weights additionally swept over kv_bits {16, 8, 4} (schema 3).  A
+    warmup stream triggers both jit compiles (prefill + decode shapes)
+    per engine before the measured run, so the JSON tracks serving
+    throughput, not XLA compile time."""
     from repro.serving import Engine, poisson_stream
 
     runs = []
     lines = []
-    for mode in ("bf16", "msgemm"):
-        if mode == "bf16":
-            p, c = params, CFG
-        else:
-            qc = QuantSpec(mode=mode, d=3)
-            p, c = quantize_model(params, CFG, qc), CFG.replace(quant=qc)
-        for rate in rates if mode == "bf16" else rates[:1]:
+    qc = QuantSpec(mode="msgemm", d=3)
+    variants = [("bf16", params, CFG, 16)]
+    mp, mc = quantize_model(params, CFG, qc), CFG.replace(quant=qc)
+    variants += [("msgemm", mp, mc, kv_bits) for kv_bits in (16, 8, 4)]
+    for mode, p, c, kv_bits in variants:
+        for rate in rates:
             eng = Engine(p, c, max_slots=4, block_size=8, prefill_chunk=16,
-                         max_model_len=48)
+                         max_model_len=48, kv_quant=_kv_spec(kv_bits))
             eng.run(poisson_stream(2, c.vocab_size, max_new_tokens=2,
                                    seed=1))  # warmup: compile both shapes
             eng.reset_metrics()
             eng.run(poisson_stream(n, c.vocab_size,
                                    max_new_tokens=new_tokens, rate=rate))
-            s = eng.summary()
+            s = eng.metrics()
             qd = _queue_depth()
             run = {"mode": mode, "arrival_rate": rate, "requests": n,
-                   "new_tokens": new_tokens, "queue_depth": qd, **s}
+                   "new_tokens": new_tokens, "queue_depth": qd,
+                   **_kv_fields(eng, kv_bits), **s}
             runs.append(run)
-            tag = f"continuous/{mode}/rate{rate:g}"
+            tag = f"continuous/{mode}/kv{kv_bits}/rate{rate:g}"
             lines.append(
                 f"serve_throughput/{tag},{1e6 / s['tok_per_s']:.1f},"
                 f"tok_per_s={s['tok_per_s']:.1f} "
@@ -145,12 +217,14 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
                 f"preemptions={s['preemptions']} "
                 f"evicted_blocks={s['evicted_blocks']} "
                 f"queue_p95={qd['p95']:g}")
+    capacity, cap_lines = _capacity(params)
+    lines += cap_lines
     RESULTS_JSON.parent.mkdir(parents=True, exist_ok=True)
     RESULTS_JSON.write_text(json.dumps(
         {"bench": "serve_continuous", "schema_version": BENCH_SERVE_SCHEMA,
          "engine": {"max_slots": 4, "block_size": 8, "prefill_chunk": 16},
          "model": {"layers": CFG.num_layers, "d_model": CFG.d_model},
-         "runs": runs}, indent=2))
+         "runs": runs, "capacity": capacity}, indent=2))
     lines.append(f"serve_throughput/continuous/json,0.0,{RESULTS_JSON}")
     return lines
 

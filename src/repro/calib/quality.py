@@ -66,3 +66,73 @@ def compare(params_ref, cfg_ref, variants: dict, data, *,
     for name, (p, c) in variants.items():
         out[name] = evaluate(params_ref, cfg_ref, p, c, data, steps=steps)
     return out
+
+
+# ------------------------------------------------------ KV-cache quality
+def _paged_arrays(B: int, S: int, block_size: int):
+    """Contiguous per-row block tables + the (write, view) slot arrays for
+    one full-sequence paged forward: row b owns blocks [1 + b*n, 1 +
+    (b+1)*n) of a pool sized exactly for the batch."""
+    from repro.serving import kv_blocks
+
+    n = -(-S // block_size)
+    ws, vs = [], []
+    for b in range(B):
+        blocks = [1 + b * n + i for i in range(n)]
+        ws.append(kv_blocks.write_slots(blocks, 0, S, S, block_size))
+        vs.append(kv_blocks.view_slots(blocks, n, block_size))
+    return np.stack(ws), np.stack(vs), 1 + B * n
+
+
+def _forward_paged(params, cfg, batch, *, block_size: int = 8):
+    """Full-sequence logits through the *paged serving* path in a single
+    (B, S) chunk.  Because each attention layer scatters the (quantized)
+    K/V before it gathers the view, every position's logits already
+    reflect quantized-KV attention — one teacher-forced call measures
+    exactly what the serving engine computes."""
+    tokens = np.asarray(batch["tokens"])
+    B, S = tokens.shape
+    ws, vs, num_blocks = _paged_arrays(B, S, block_size)
+    pool = transformer.init_paged_cache(cfg, num_blocks, block_size)
+    positions = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+    logits, _ = transformer.forward_paged(params, cfg, tokens, pool,
+                                          positions, ws, vs)
+    return logits
+
+
+def evaluate_kv(params, cfg, kv_spec, data, *, steps: int = 2,
+                block_size: int = 8) -> dict:
+    """One KV-storage variant vs the bf16-KV dense forward, same weights.
+
+    ``kv_spec`` None re-runs the paged path with full-precision pools —
+    its metrics certify the harness (logit_mse 0, top1_agree 1 up to
+    float noise) so nonzero deltas are attributable to KV storage alone.
+    """
+    cfg_q = cfg.replace(kv_quant=kv_spec)
+    batches = _batches_from(data, steps)
+    ces, mses, agree = [], [], []
+    for batch in batches:
+        ref = _forward(params, cfg, batch)
+        got = _forward_paged(params, cfg_q, batch, block_size=block_size)
+        ce, _ = cross_entropy(got, batch["labels"])
+        ces.append(float(ce))
+        mses.append(float(jnp.mean((got - ref) ** 2)))
+        agree.append(float(jnp.mean(
+            (jnp.argmax(got, -1) == jnp.argmax(ref, -1)).astype(jnp.float32))))
+    return {
+        "perplexity": float(np.exp(np.mean(ces))),
+        "logit_mse": float(np.mean(mses)),
+        "top1_agree": float(np.mean(agree)),
+    }
+
+
+def compare_kv(params, cfg, kv_variants: dict, data, *, steps: int = 2,
+               block_size: int = 8) -> dict:
+    """kv_variants: name -> KVQuantSpec | None.  Returns name -> metric
+    dict, plus the dense-cache reference under 'bf16_kv'."""
+    out = {"bf16_kv": evaluate_kv(params, cfg, None, data, steps=steps,
+                                  block_size=block_size)}
+    for name, spec in kv_variants.items():
+        out[name] = evaluate_kv(params, cfg, spec, data, steps=steps,
+                                block_size=block_size)
+    return out

@@ -314,8 +314,16 @@ def cache_specs(cache_shape, mesh: Mesh, rules: str = "default"):
 # the block and slot dims stay replicated: scatter/gather by flat slot
 # id must find every sequence's blocks on every data shard.
 PAGED_CACHE_AXES: dict[str, tuple] = {
+    # full-precision values *or* quantized u8 codes (last dim Dh or the
+    # packed Dhp — 'head_dim' maps to () in serve rules, so both shard
+    # identically: replicated tail, kvheads on 'model')
     "k": ("layers", "none", "none", "kvheads", "head_dim"),
     "v": ("layers", "none", "none", "kvheads", "head_dim"),
+    # quantized-pool scale leaves (repro.kvq.pool): (G, nb, bs, Hk) f32,
+    # same (block, slot) replication + kvheads placement as the codes so
+    # a flat slot id addresses codes and scales on the same shard
+    "k_scale": ("layers", "none", "none", "kvheads"),
+    "v_scale": ("layers", "none", "none", "kvheads"),
 }
 
 

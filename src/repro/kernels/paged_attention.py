@@ -1,0 +1,163 @@
+"""Paged attention over the quantized KV block pool — dequantize in VMEM.
+
+The serving-side analogue of kernels/msgemm.py's produce-once/consume-many
+structure: the pool stores low-bit codes + scales in HBM (repro.kvq),
+and the *kernel* reconstructs K/V values from the 16-entry table / int
+grid inside VMEM right before the dot — the HBM-resident dequantized
+copies that ``models/layers.attn_paged``'s jnp reference path
+materializes via ``jnp.take`` never exist here.  Per step the kernel
+reads the quantized bytes once; the f32 K/V blocks live only as
+(block_size, Dh) VMEM tiles.
+
+Block tables ride scalar prefetch (pltpu.PrefetchScalarGridSpec): the
+grid is (B, H, blocks-per-view) and the kv-side index maps dereference
+``block_tables[b, i]`` to DMA exactly the block each step consumes —
+gather-by-block-table at the BlockSpec level, no flat-slot gather op.
+
+Softmax is the standard flash online recurrence (kernels/
+flash_attention.py) carried in VMEM scratch across the innermost grid
+dim; masking is position-based (layers.view_mask semantics): view index
+w holds logical position w, so kvpos = i*block_size + offset and a row
+attends iff kvpos <= qpos (+ sliding window).  Scratch-padded blocks sit
+at view positions > every qpos, so they mask to probability exactly 0;
+view position 0 is always valid (every query attends to it), so the
+running max is grounded before any fully-masked block is folded in.
+
+Validated against the jnp gather+dequant reference in interpret mode
+(tests/test_kvq.py); ``interpret=None`` auto-detects like the other
+kernels (compiled on TPU, interpreter elsewhere).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_block(codes, scales, *, bits: int, codebook, head_dim: int):
+    """(bs, Dhp) u8 codes + (bs,) scales -> (bs, Dh) f32 values, all in
+    VMEM.  The codebook path reconstructs via a 16-way select chain on
+    scalar constants — no in-kernel gather, no captured array consts."""
+    c = codes.astype(jnp.int32)
+    if bits == 8:
+        vals = jnp.where(c < 128, c, c - 256).astype(jnp.float32)
+    else:
+        hi, lo = (c >> 4) & 0xF, c & 0xF  # hi nibble first (pack_storage)
+        cc = jnp.stack([hi, lo], axis=-1).reshape(c.shape[0], -1)
+        cc = cc[:, :head_dim]
+        if codebook is None:
+            vals = jnp.where(cc <= 7, cc, cc - 16).astype(jnp.float32)
+        else:
+            # 16-way select chain over scalar constants: pallas_call
+            # rejects captured *array* constants, and a chain of selects
+            # on the (bs, Dh) code tile is VPU-trivial next to the dot
+            vals = jnp.zeros(cc.shape, jnp.float32)
+            for j, entry in enumerate(codebook):
+                if entry:
+                    vals = jnp.where(cc == j, jnp.float32(entry), vals)
+    return vals * scales.astype(jnp.float32)[:, None]
+
+
+def _kernel(bt_ref, q_ref, pos_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, bits: int, codebook,
+            block_size: int, nseq: int, head_dim: int, window: int,
+            softcap: float, scale: float):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    qb = q_ref[...][0, :, 0, :].astype(jnp.float32) * scale  # (C, Dh)
+    k = _decode_block(kc_ref[...][0, :, 0, :], ks_ref[...][0, :, 0],
+                      bits=bits, codebook=codebook, head_dim=head_dim)
+    v = _decode_block(vc_ref[...][0, :, 0, :], vs_ref[...][0, :, 0],
+                      bits=bits, codebook=codebook, head_dim=head_dim)
+    s = qb @ k.T  # (C, bs)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = pos_ref[...][0]  # (C,)
+    kvpos = i * block_size + jax.lax.iota(jnp.int32, block_size)
+    ok = kvpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kvpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m, l = m_scr[...][:, 0], l_scr[...][:, 0]
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m - m_new)
+    l_new = corr * l + jnp.sum(p, axis=-1)
+    acc_new = corr[:, None] * acc_scr[...] + p @ v
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+    acc_scr[...] = acc_new
+
+    @pl.when(i == nseq - 1)
+    def _writeback():
+        o_ref[...] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                      )[None, :, None, :].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "codebook", "block_size", "window",
+                              "softcap", "interpret"))
+def paged_attention_pallas(q, k_codes, k_scales, v_codes, v_scales,
+                           block_tables, positions, *, bits: int,
+                           codebook=None, block_size: int,
+                           window: int = 0, softcap: float = 0.0,
+                           interpret: bool | None = None):
+    """q (B, C, H, Dh); codes (nb, bs, Hk, Dhp) u8 + scales (nb, bs, Hk)
+    f32 (the repro.kvq pool layout); block_tables (B, nseq) int32 block
+    ids covering each row's view positions [0, nseq*bs); positions (B, C)
+    int32 logical query positions.  Returns (B, C, H, Dh) in q.dtype.
+
+    ``codebook`` is the spec's static 16-float tuple (None: int grid) —
+    embedded as a compile-time constant, consumed from VMEM per block."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, C, H, dh = q.shape
+    nb, bs, hk, dhp = k_codes.shape
+    assert bs == block_size, (bs, block_size)
+    assert H % hk == 0, (H, hk)
+    g = H // hk
+    nseq = block_tables.shape[1]
+    kern = functools.partial(
+        _kernel, bits=bits, codebook=codebook, block_size=block_size,
+        nseq=nseq, head_dim=dh, window=window, softcap=softcap,
+        scale=dh**-0.5)
+    code_spec = pl.BlockSpec((1, bs, 1, dhp),
+                             lambda b, h, i, bt: (bt[b, i], 0, h // g, 0))
+    scale_spec = pl.BlockSpec((1, bs, 1),
+                              lambda b, h, i, bt: (bt[b, i], 0, h // g))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nseq),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, dh), lambda b, h, i, bt: (b, 0, h, 0)),
+            pl.BlockSpec((1, C), lambda b, h, i, bt: (b, 0)),
+            code_spec, scale_spec, code_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, dh),
+                               lambda b, h, i, bt: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, 1), jnp.float32),   # running max m
+            pltpu.VMEM((C, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((C, dh), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), q,
+      jnp.asarray(positions, jnp.int32), k_codes, k_scales,
+      v_codes, v_scales)

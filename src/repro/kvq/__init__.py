@@ -1,0 +1,43 @@
+"""Quantized paged KV cache — the paper's LUT quantization applied to
+serving memory.
+
+The pool stores low-bit codes + per-slot-per-head scales instead of
+bf16/f32 values (2–4x+ more resident sequences per pool byte), and the
+Pallas paged-attention kernel (kernels/paged_attention.py) dequantizes
+K/V inside VMEM at consume time — the serving-side analogue of
+msGeMM's produce-once/consume-many LUT reconstruction.
+
+Public surface:
+
+* :class:`KVQuantSpec` — frozen, hashable storage description
+  (``ModelConfig.kv_quant``);
+* :func:`kv_quantize` / :func:`kv_dequantize` — write/read ops;
+* :func:`init_kv_pool`, :func:`bytes_per_token`, :func:`pool_bytes`,
+  :func:`blocks_for_bytes`, :func:`capacity_table` — pool tensors and
+  the capacity arithmetic the engine sizes pools with;
+* :mod:`repro.kvq.attention` — paged-attention backends (importing this
+  package registers them in the dispatch registry);
+* :func:`fit_kv_codebook` — Lloyd-fitted 16-entry KV codebook (lazy:
+  pulls in calib only when called).
+"""
+
+from __future__ import annotations
+
+from repro.kvq import attention  # noqa: F401  (registers backends)
+from repro.kvq.pool import (blocks_for_bytes, bytes_per_token,  # noqa: F401
+                            capacity_table, init_kv_pool, pool_bytes)
+from repro.kvq.quantize import (kv_dequantize, kv_quantize,  # noqa: F401
+                                pack_codes, unpack_codes)
+from repro.kvq.spec import KVQuantSpec  # noqa: F401
+
+
+def fit_kv_codebook(*args, **kwargs):
+    """Lazy re-export of :func:`repro.kvq.fit.fit_kv_codebook` (keeps
+    calib out of the serving import path)."""
+    from repro.kvq.fit import fit_kv_codebook as _fit
+    return _fit(*args, **kwargs)
+
+
+def kv_reconstruction_error(*args, **kwargs):
+    from repro.kvq.fit import kv_reconstruction_error as _err
+    return _err(*args, **kwargs)

@@ -1,0 +1,93 @@
+"""Fit the 16-entry KV codebook from real K/V activations.
+
+Reuses calib's weighted Lloyd k-means (calib.fit.fit_codebook — entry 0
+pinned at 0, initialized at the uniform int4 grid so the learned table
+never does worse than uniform on the fitted samples).  Samples are the
+*scale-normalized* K/V values the pool will actually store: we run the
+model's dense-cache prefill over calibration batches, read every layer's
+K/V out of the cache, and normalize each (token, head) row by its
+``amax / 7`` write scale — exactly the quantizer's input distribution
+(kvq.quantize.kv_quantize with bits=4).
+
+Fitting is host-side numpy, offline, once per model — only the resulting
+16 floats ride the hot path (inside KVQuantSpec, a jit-static tuple).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kvq.quantize import kv_dequantize, kv_quantize
+from repro.kvq.spec import KVQuantSpec
+
+INT4_MAX = 7
+
+
+def collect_kv_samples(params, cfg, batches, *, max_samples: int = 1 << 20,
+                       seed: int = 0) -> np.ndarray:
+    """Scale-normalized K/V values from a dense-cache prefill of each
+    batch.  Returns a flat float array (subsampled to ``max_samples``)."""
+    from repro.models import transformer
+
+    chunks = []
+    for batch in batches:
+        tokens = np.asarray(batch["tokens"])
+        B, S = tokens.shape
+        cache = transformer.init_cache(cfg, B, S, jnp.float32)
+        _, cache = transformer.prefill(params, cfg, {"tokens": tokens}, cache)
+        for group in cache.values():
+            for name in ("k", "v"):
+                if name not in group:
+                    continue
+                a = np.asarray(group[name], np.float64)  # (G, B, S, Hk, Dh)
+                amax = np.abs(a).max(axis=-1, keepdims=True)
+                z = a / np.where(amax > 0, amax / INT4_MAX, 1.0)
+                chunks.append(z.reshape(-1))
+    z = np.concatenate(chunks) if chunks else np.zeros((0,))
+    if z.size > max_samples:
+        rng = np.random.default_rng(seed)
+        z = z[rng.choice(z.size, size=max_samples, replace=False)]
+    return z
+
+
+def fit_kv_codebook(params, cfg, batches=None, *, tokens=None,
+                    iters: int = 25, max_samples: int = 1 << 20,
+                    seed: int = 0) -> tuple[float, ...]:
+    """Fit and return the 16-entry KV value table as a KVQuantSpec-ready
+    tuple.  ``batches`` is an iterable of {'tokens': (B, S)} dicts;
+    without one, a small synthetic batch is drawn (enough to place the
+    centroids on the model's actual K/V distribution — e.g. RoPE'd keys
+    are far from the weight distribution the weight codebooks see)."""
+    from repro.calib.fit import fit_codebook
+
+    if batches is None:
+        if tokens is None:
+            key = jax.random.PRNGKey(seed)
+            S = min(32, cfg.max_seq_len)
+            tokens = jax.random.randint(key, (2, S), 0, cfg.vocab_size)
+        batches = [{"tokens": np.asarray(tokens)}]
+    z = collect_kv_samples(params, cfg, batches, max_samples=max_samples,
+                           seed=seed)
+    cb = fit_codebook(z, iters=iters, sample_limit=max_samples, seed=seed)
+    return tuple(float(v) for v in cb)
+
+
+def kv_reconstruction_error(params, cfg, batches, spec: KVQuantSpec,
+                            *, max_samples: int = 1 << 18,
+                            seed: int = 0) -> float:
+    """Mean squared quantize->dequantize error over real K/V samples —
+    the value-space analogue of calib's weighted_quant_err, used by the
+    quality bench to gate learned-vs-uniform (Lloyd is monotone from the
+    uniform init, so on the fitting samples learned <= uniform holds by
+    construction)."""
+    z = collect_kv_samples(params, cfg, batches, max_samples=max_samples,
+                           seed=seed)
+    x = jnp.asarray(z, jnp.float32).reshape(1, -1)
+    # pad to an even length for 4-bit packing of the flat sample row
+    if x.shape[-1] % 2:
+        x = jnp.pad(x, ((0, 0), (0, 1)))
+    codes, scales = kv_quantize(x, spec)
+    back = kv_dequantize(codes, scales, spec, x.shape[-1])
+    return float(jnp.mean((back - x) ** 2))

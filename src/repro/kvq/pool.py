@@ -1,0 +1,95 @@
+"""Quantized pool tensors + the capacity arithmetic the engine and the
+serving benchmarks size pools with.
+
+A quantized pool entry stores four leaves instead of two:
+
+    k        (num_blocks, block_size, Hk, Dhp)  uint8 packed codes
+    k_scale  (num_blocks, block_size, Hk)       f32 per-slot-per-head
+    v        (num_blocks, block_size, Hk, Dhp)  uint8
+    v_scale  (num_blocks, block_size, Hk)       f32
+
+Dhp = spec.packed_dim(head_dim) (= Dh at 8-bit, ceil(Dh/2) at 4-bit).
+Alignment follows core/scales: codes row-major with the head_dim packed
+innermost, scales a separate f32 tensor indexed by the same (block,
+slot, head) coordinates — so a flat slot id addresses codes and scales
+identically and serving/kv_blocks.py stays byte-agnostic (block tables
+never learn what a slot costs).
+
+Capacity math (README §Quantized KV cache):
+
+    bytes/token = num_layers * 2 * Hk * (Dhp + 4)          [quantized]
+                = num_layers * 2 * Hk * Dh * itemsize      [kv_quant=None]
+
+so at f32 pools and Dh=64: int8 is ~3.8x and int4 ~7.1x smaller — the
+same pool-byte budget holds 2–4x+ more resident sequences.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvq.spec import KVQuantSpec
+
+SCALE_BYTES = 4  # scales are f32
+
+
+def init_kv_pool(spec: KVQuantSpec, num_blocks: int, block_size: int,
+                 num_kv_heads: int, head_dim: int) -> dict:
+    """One layer's quantized pool entry (codes + scales, zero-filled —
+    code 0 dequantizes to exactly 0 under every code map)."""
+    dhp = spec.packed_dim(head_dim)
+    codes = (num_blocks, block_size, num_kv_heads, dhp)
+    scales = (num_blocks, block_size, num_kv_heads)
+    return {"k": jnp.zeros(codes, jnp.uint8),
+            "k_scale": jnp.zeros(scales, jnp.float32),
+            "v": jnp.zeros(codes, jnp.uint8),
+            "v_scale": jnp.zeros(scales, jnp.float32)}
+
+
+def bytes_per_token(cfg, spec: KVQuantSpec | None = None,
+                    dtype=jnp.float32) -> int:
+    """Pool bytes one token slot costs across the whole layer stack
+    (k + v, codes + scales).  ``spec=None`` prices the full-precision
+    pool at ``dtype``."""
+    hk, dh = cfg.num_kv_heads, cfg.head_dim
+    if spec is None:
+        per_layer = 2 * hk * dh * jnp.dtype(dtype).itemsize
+    else:
+        per_layer = 2 * hk * (spec.packed_dim(dh) + SCALE_BYTES)
+    return cfg.num_layers * per_layer
+
+
+def pool_bytes(cfg, num_blocks: int, block_size: int,
+               spec: KVQuantSpec | None = None, dtype=jnp.float32) -> int:
+    """Total device bytes of a pool of ``num_blocks`` (incl. scratch)."""
+    return num_blocks * block_size * bytes_per_token(cfg, spec, dtype)
+
+
+def blocks_for_bytes(cfg, budget_bytes: int, block_size: int,
+                     spec: KVQuantSpec | None = None,
+                     dtype=jnp.float32) -> int:
+    """Largest pool (block count, incl. the scratch block) fitting a byte
+    budget — what ``Engine(kv_pool_bytes=)`` admits against.  Always
+    >= 2 (one scratch + one allocatable block) so a tiny budget degrades
+    to a working, heavily-preempting pool rather than a crash."""
+    bpb = block_size * bytes_per_token(cfg, spec, dtype)
+    return max(2, int(np.floor(budget_bytes / bpb)))
+
+
+def capacity_table(cfg, block_size: int, dtypes=(jnp.float32,),
+                   specs: dict | None = None) -> list[dict]:
+    """Rows for the README capacity table: bytes/token and relative
+    resident-sequence multiplier per storage option."""
+    rows = []
+    base = bytes_per_token(cfg, None, dtypes[0])
+    options = {"kv16": None, "kv8": KVQuantSpec(bits=8),
+               "kv4": KVQuantSpec(bits=4)}
+    if specs:
+        options.update(specs)
+    for name, spec in options.items():
+        bpt = bytes_per_token(cfg, spec, dtypes[0])
+        rows.append({"kv": name, "bytes_per_token": bpt,
+                     "bytes_per_block": bpt * block_size,
+                     "resident_multiplier": round(base / bpt, 2)})
+    return rows

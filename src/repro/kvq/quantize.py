@@ -1,0 +1,91 @@
+"""Quantize-on-write / dequantize-on-read ops for the paged KV pool.
+
+All functions are shape-generic over a trailing ``head_dim`` axis: the
+write path quantizes freshly projected K/V ``(B, C, Hk, Dh)`` before the
+scatter into the pool, the read path dequantizes gathered code rows
+``(B, W, Hk, Dhp)``.  The scale axis is everything but the last dim —
+one symmetric scale per (token, kv-head), so a token's codes never need
+revisiting after its write (append-only pool).
+
+Code <-> value maps:
+
+* int8: two's-complement byte, value = code (signed) * scale;
+* int4 uniform: the paper §3.1 map ``b`` (core.packing.b_values), two
+  codes packed per byte hi-nibble-first (core.packing.pack_storage);
+* int4 learned: code = nearest entry of the spec's 16-value codebook on
+  the scale-normalized value, value = codebook[code] * scale.
+
+Round-trip exactness (tests/test_kvq.py): any input of the form
+``grid_value * scale`` with ``|grid_value| <= qmax`` survives
+quantize -> dequantize bit-exactly, because the amax-derived scale
+reproduces exactly and round() hits the grid point.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kvq.spec import KVQuantSpec
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """codes (..., Dh) uint8 -> packed u8 storage (..., Dhp)."""
+    if bits == 8:
+        return jnp.asarray(codes, jnp.uint8)
+    return packing.pack_storage(codes)
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, head_dim: int
+                 ) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes` (drops 4-bit pad columns)."""
+    if bits == 8:
+        return packed
+    return packing.unpack_storage(packed, head_dim)
+
+
+def kv_scales(x: jnp.ndarray, spec: KVQuantSpec) -> jnp.ndarray:
+    """Symmetric per-(token, head) scale over the trailing head_dim:
+    amax / qmax, with all-zero rows mapped to scale 1 (codes are all the
+    zero code, so the round trip stays exact)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    return jnp.where(amax > 0, amax / spec.qmax, 1.0).astype(jnp.float32)
+
+
+def kv_quantize(x: jnp.ndarray, spec: KVQuantSpec
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., Dh) float -> (packed codes (..., Dhp) uint8, scales (...)
+    f32).  The write half of the pool's storage format."""
+    xf = x.astype(jnp.float32)
+    scale = kv_scales(xf, spec)
+    z = xf / scale[..., None]
+    if spec.codebook is None:
+        q = jnp.clip(jnp.round(z), -spec.qmax, spec.qmax).astype(jnp.int32)
+        mask = 0xFF if spec.bits == 8 else 0xF  # two's complement in u8
+        codes = (q & mask).astype(jnp.uint8)
+    else:
+        cb = jnp.asarray(spec.codebook, jnp.float32)
+        codes = jnp.argmin(
+            jnp.abs(z[..., None] - cb), axis=-1).astype(jnp.uint8)
+    return pack_codes(codes, spec.bits), scale
+
+
+def decode_values(codes: jnp.ndarray, spec: KVQuantSpec) -> jnp.ndarray:
+    """Unpacked codes (..., Dh) uint8 -> grid/codebook values f32 (the
+    value table lookup, before the scale multiply)."""
+    c = codes.astype(jnp.int32)
+    if spec.codebook is not None:
+        return jnp.take(jnp.asarray(spec.codebook, jnp.float32), c, axis=0)
+    if spec.bits == 8:
+        return jnp.where(c < 128, c, c - 256).astype(jnp.float32)
+    return jnp.take(packing.b_values(), c, axis=0)
+
+
+def kv_dequantize(packed: jnp.ndarray, scales: jnp.ndarray,
+                  spec: KVQuantSpec, head_dim: int,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """(packed (..., Dhp) u8, scales (...)) -> values (..., Dh) ``dtype``.
+    The read half; the jnp reference backend materializes this in HBM,
+    the Pallas kernel runs the same math per block inside VMEM."""
+    vals = decode_values(unpack_codes(packed, spec.bits, head_dim), spec)
+    return (vals * scales[..., None].astype(jnp.float32)).astype(dtype)

@@ -159,9 +159,36 @@ def make_request_stream(args, cfg):
                           max_prompt=args.prompt_len, seed=args.seed)
 
 
+def kv_spec_from_args(args, params, cfg):
+    """--kv-bits/--kv-codebook -> KVQuantSpec (None at 16 bits).  A
+    learned codebook is fitted here, once, from the model's own K/V
+    activations on a synthetic batch (repro.kvq.fit)."""
+    if args.kv_bits == 16:
+        if args.kv_codebook == "learned":
+            print("[serve] --kv-codebook learned ignored at --kv-bits 16")
+        return None
+    codebook = None
+    if args.kv_codebook == "learned":
+        if args.kv_bits != 4:
+            print("[serve] --kv-codebook learned ignored at --kv-bits 8 "
+                  "(codebooks are a 4-bit construct)")
+        else:
+            from repro import kvq
+
+            codebook = kvq.fit_kv_codebook(params, cfg, seed=args.seed)
+            print("[serve] fitted 16-entry KV codebook from model "
+                  "activations")
+    from repro.kvq import KVQuantSpec
+
+    return KVQuantSpec(bits=args.kv_bits, codebook=codebook)
+
+
 def run_continuous(args, params, cfg, mesh=None):
     from repro.serving import Engine
 
+    kv_spec = kv_spec_from_args(args, params, cfg)
+    if kv_spec is not None:
+        print(f"[serve] quantized KV cache: {kv_spec.describe()}")
     max_len = args.prompt_len + args.new_tokens
     engine = Engine(params, cfg,
                     max_slots=args.max_slots,
@@ -173,7 +200,10 @@ def run_continuous(args, params, cfg, mesh=None):
                     autotune=args.autotune,
                     autotune_cache=args.autotune_cache,
                     mesh=mesh, mesh_rules=args.mesh_rules,
-                    shard_collective=args.shard_collective)
+                    shard_collective=args.shard_collective,
+                    kv_quant=kv_spec,
+                    kv_pool_bytes=(int(args.kv_pool_mib * 2**20)
+                                   if args.kv_pool_mib else None))
     if mesh is not None:
         n_sharded = sum(1 for p in engine.exec_plans.values()
                         if p.shard is not None)
@@ -243,6 +273,18 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="KV pool blocks (0: sized to never preempt)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    # quantized KV cache (repro.kvq; continuous engine only)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8, 4],
+                    help="paged KV pool storage: 16 = full precision, "
+                         "8/4 = quantized codes + per-slot scales")
+    ap.add_argument("--kv-codebook", default="uniform",
+                    choices=["uniform", "learned"],
+                    help="4-bit code map: uniform int4 grid or a 16-entry "
+                         "codebook fitted from the model's K/V activations")
+    ap.add_argument("--kv-pool-mib", type=float, default=0,
+                    help="size the KV pool by a device-byte budget (MiB) "
+                         "instead of --num-blocks; quantized pools fit "
+                         "proportionally more blocks")
     ap.add_argument("--check", action="store_true",
                     help="assert token parity vs the static generate path")
     # execution planning (repro.dispatch)
@@ -317,6 +359,10 @@ def main(argv=None):
         if args.engine == "continuous":
             out = run_continuous(args, params, cfg, mesh)
         else:
+            if args.kv_bits != 16 or args.kv_pool_mib:
+                print("[serve] --kv-bits/--kv-pool-mib apply to the paged "
+                      "pool only; ignored by --engine static",
+                      file=sys.stderr)
             if args.autotune_cache is not None:
                 dispatch.set_cache_path(args.autotune_cache)
             if mesh is not None:
@@ -343,7 +389,8 @@ def main(argv=None):
             snap = obs.registry().snapshot(extra={
                 "arch": args.arch, "quant": args.quant,
                 "engine": args.engine, "mesh": args.mesh,
-                "backend": args.backend})
+                "backend": args.backend, "kv_bits": args.kv_bits,
+                "kv_codebook": args.kv_codebook})
             with open(args.metrics_json, "w") as f:
                 json.dump(snap, f, indent=1)
             print(f"[serve] wrote metrics snapshot {args.metrics_json}")

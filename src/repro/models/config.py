@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 
 from repro.core.linear import DENSE, QuantConfig  # noqa: F401 (re-export)
 from repro.core.spec import QuantSpec
+from repro.kvq.spec import KVQuantSpec
 
 
 @dataclass(frozen=True)
@@ -103,6 +104,10 @@ class ModelConfig:
     # weight representation (QuantSpec; the deprecated QuantConfig shim
     # is accepted anywhere a spec is and carries its own exec policy)
     quant: QuantSpec = field(default_factory=lambda: DENSE)
+    # paged-KV-cache storage (serving only): None keeps full-precision
+    # pools; a KVQuantSpec stores codes+scales and routes paged attention
+    # through repro.kvq (quantize-on-write, dequantize-on-read/in-kernel)
+    kv_quant: KVQuantSpec | None = None
     remat: bool = True
     # 'nothing' recomputes the whole group in backward (min memory);
     # 'dots' saves matmul outputs (no re-forward of the MXU work — trades

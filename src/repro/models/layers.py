@@ -190,47 +190,88 @@ def attn_decode(p, cfg, x, cache_k, cache_v, pos, *, window: int = 0,
     return out, new_k, new_v
 
 
-def attn_paged(p, cfg, x, k_pool, v_pool, positions, write_slots, view_slots,
+def attn_paged(p, cfg, x, cache, positions, write_slots, view_slots,
                *, window: int = 0, residual=None):
     """Self-attention over a paged (block-pooled) KV cache — one step of
     chunked prefill (C > 1) or batched decode (C == 1); the two share this
     code and its compiled form.
 
-    x (B, C, d) normed hidden; k_pool/v_pool (num_blocks, bs, Hk, Dh) the
-    layer's shared block pool; positions (B, C) logical token positions;
-    write_slots (B, C) flat pool slots (block*bs + offset) where this
-    step's K/V are scattered — padding rows point into the reserved
-    scratch block; view_slots (B, W) flat pool slots such that view index
-    w holds sequence b's logical position w (block tables expanded by the
-    host scheduler, padded with scratch).  Masked (future / scratch) view
-    entries get probability exactly 0, so outputs match the dense-cache
-    path bit-for-bit.
+    x (B, C, d) normed hidden; ``cache`` is the layer's shared block pool:
+    {"k", "v"} of (num_blocks, bs, Hk, Dh) at full precision, or the
+    quantized {"k", "k_scale", "v", "v_scale"} layout of repro.kvq.pool
+    when ``cfg.kv_quant`` is set; positions (B, C) logical token
+    positions; write_slots (B, C) flat pool slots (block*bs + offset)
+    where this step's K/V are scattered — padding rows point into the
+    reserved scratch block; view_slots (B, W) flat pool slots such that
+    view index w holds sequence b's logical position w (block tables
+    expanded by the host scheduler, padded with scratch).  Masked
+    (future / scratch) view entries get probability exactly 0, so
+    outputs match the dense-cache path bit-for-bit.
 
-    Returns (out, new_k_pool, new_v_pool).
+    Returns (out, new_cache).
     """
     q, k, v = _qkv(p, cfg, x, x, positions, positions)
-    nb, bs, hk, dh = k_pool.shape
-    kp = k_pool.reshape(nb * bs, hk, dh)
-    vp = v_pool.reshape(nb * bs, hk, dh)
-    ws = write_slots.reshape(-1)
-    kp = kp.at[ws].set(k.reshape(-1, hk, dh).astype(kp.dtype))
-    vp = vp.at[ws].set(v.reshape(-1, hk, dh).astype(vp.dtype))
-    # mesh-aware pool layout: slots replicated (every data shard must
-    # resolve any sequence's blocks), kvheads on the model axis when
-    # divisible — matching runtime.serve.init_paged_cache's placement so
-    # the scatter/gather pair stays local to each model shard
-    kp = constrain(kp, "none", "kvheads", "head_dim")
-    vp = constrain(vp, "none", "kvheads", "head_dim")
-    k_view = jnp.take(kp, view_slots, axis=0)  # (B, W, Hk, Dh)
-    v_view = jnp.take(vp, view_slots, axis=0)
-    k_view = constrain(k_view, "batch", "kv_seq", "kvheads", "head_dim")
-    v_view = constrain(v_view, "batch", "kv_seq", "kvheads", "head_dim")
-    m = view_mask(view_slots.shape[1], positions, window=window)
-    out = _sdpa(cfg, q, k_view, v_view, m[:, None])
+    if cfg.kv_quant is not None:
+        out, new_cache = _attn_paged_quantized(
+            cfg, q, k, v, cache, positions, write_slots, view_slots,
+            window=window)
+    else:
+        k_pool, v_pool = cache["k"], cache["v"]
+        nb, bs, hk, dh = k_pool.shape
+        kp = k_pool.reshape(nb * bs, hk, dh)
+        vp = v_pool.reshape(nb * bs, hk, dh)
+        ws = write_slots.reshape(-1)
+        kp = kp.at[ws].set(k.reshape(-1, hk, dh).astype(kp.dtype))
+        vp = vp.at[ws].set(v.reshape(-1, hk, dh).astype(vp.dtype))
+        # mesh-aware pool layout: slots replicated (every data shard must
+        # resolve any sequence's blocks), kvheads on the model axis when
+        # divisible — matching runtime.serve.init_paged_cache's placement
+        # so the scatter/gather pair stays local to each model shard
+        kp = constrain(kp, "none", "kvheads", "head_dim")
+        vp = constrain(vp, "none", "kvheads", "head_dim")
+        k_view = jnp.take(kp, view_slots, axis=0)  # (B, W, Hk, Dh)
+        v_view = jnp.take(vp, view_slots, axis=0)
+        k_view = constrain(k_view, "batch", "kv_seq", "kvheads", "head_dim")
+        v_view = constrain(v_view, "batch", "kv_seq", "kvheads", "head_dim")
+        m = view_mask(view_slots.shape[1], positions, window=window)
+        out = _sdpa(cfg, q, k_view, v_view, m[:, None])
+        new_cache = dict(cache,
+                         k=kp.reshape(nb, bs, hk, dh),
+                         v=vp.reshape(nb, bs, hk, dh))
     out = common.linear_apply(p["wo"], out, cfg.quant,
                               in_dim=cfg.num_heads * cfg.head_dim, tag="wo",
                               residual=residual)
-    return out, kp.reshape(nb, bs, hk, dh), vp.reshape(nb, bs, hk, dh)
+    return out, new_cache
+
+
+def _attn_paged_quantized(cfg, q, k, v, cache, positions, write_slots,
+                          view_slots, *, window: int = 0):
+    """Quantize-on-write into the codes+scales pool, then dispatch the
+    attention math through the registered paged-attention backend
+    (repro.kvq.attention: jnp gather+dequant reference, or the Pallas
+    kernel that dequantizes in VMEM)."""
+    from repro import kvq
+    from repro.kvq import attention as kvq_attn
+
+    spec = cfg.kv_quant
+    B, C, H, dh = q.shape
+    nb, bs, hk, dhp = cache["k"].shape
+    ws = write_slots.reshape(-1)
+    kq, ks = kvq.kv_quantize(k, spec)  # codes (B, C, Hk, Dhp), scales f32
+    vq, vs = kvq.kv_quantize(v, spec)
+    new_cache = {}
+    for name, codes, scales in (("k", kq, ks), ("v", vq, vs)):
+        cp = cache[name].reshape(nb * bs, hk, dhp)
+        sp = cache[f"{name}_scale"].reshape(nb * bs, hk)
+        cp = cp.at[ws].set(codes.reshape(-1, hk, dhp))
+        sp = sp.at[ws].set(scales.reshape(-1, hk))
+        cp = constrain(cp, "none", "kvheads", "none")
+        sp = constrain(sp, "none", "kvheads")
+        new_cache[name] = cp.reshape(nb, bs, hk, dhp)
+        new_cache[f"{name}_scale"] = sp.reshape(nb, bs, hk)
+    out = kvq_attn.run(spec, cfg, q, new_cache, view_slots, positions,
+                       window=window)
+    return out, new_cache
 
 
 def cross_attn_apply(p, cfg, x, enc_k, enc_v, positions, *, residual=None):

@@ -112,10 +112,10 @@ def block_apply(p, cfg: ModelConfig, kind: str, x, positions, *,
         # fused epilogue (no separate x + y elementwise pass)
         if mode == "paged":
             write_slots, view_slots = paged
-            y, nk, nv = layers.attn_paged(
-                p["attn"], cfg, h, cache["k"], cache["v"], positions,
+            y, paged_cache = layers.attn_paged(
+                p["attn"], cfg, h, cache, positions,
                 write_slots, view_slots, window=window, residual=x)
-            new_cache["k"], new_cache["v"] = nk, nv
+            new_cache.update(paged_cache)
         elif mode == "decode":
             y, nk, nv = layers.attn_decode(
                 p["attn"], cfg, h, cache["k"], cache["v"], pos, window=window,
@@ -357,26 +357,35 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict):
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.float32) -> dict:
+                     dtype=jnp.float32, *, kv_spec=None) -> dict:
     """Stacked (G, num_blocks, bs, Hk, Dh) KV block pool for paged serving.
 
     One shared pool per layer group: sequences own disjoint block subsets
     via host-side block tables (serving/kv_blocks.py), so the (batch,
     max_len) dense cache footprint becomes (blocks actually in use).
-    Attention-free (recurrent) block kinds, enc-dec, and modality
-    frontends are not paged — the continuous engine rejects them.
+    ``kv_spec`` (default ``cfg.kv_quant``) switches the pool tensors to
+    the quantized codes+scales layout of repro.kvq.pool — same block/slot
+    indexing, 2–4x+ fewer bytes per token.  Attention-free (recurrent)
+    block kinds, enc-dec, and modality frontends are not paged — the
+    continuous engine rejects them.
     """
     if cfg.is_encdec or cfg.frontend:
         raise NotImplementedError(
             "paged serving supports plain decoder-only models")
+    if kv_spec is None:
+        kv_spec = cfg.kv_quant
     hk, dh = cfg.num_kv_heads, cfg.head_dim
     out = {}
     for i, kind in enumerate(cfg.block_pattern):
         if kind not in ("attn", "local", "moe"):
             raise NotImplementedError(
                 f"paged KV cache for block kind {kind!r}")
-        one = {"k": jnp.zeros((num_blocks, block_size, hk, dh), dtype),
-               "v": jnp.zeros((num_blocks, block_size, hk, dh), dtype)}
+        if kv_spec is not None:
+            from repro import kvq
+            one = kvq.init_kv_pool(kv_spec, num_blocks, block_size, hk, dh)
+        else:
+            one = {"k": jnp.zeros((num_blocks, block_size, hk, dh), dtype),
+                   "v": jnp.zeros((num_blocks, block_size, hk, dh), dtype)}
         out[f"{i}:{kind}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.num_groups, *a.shape)).copy(),
             one)

@@ -44,13 +44,16 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.float32, *, mesh=None, rules: str = "serve"):
+                     dtype=jnp.float32, *, kv_spec=None, mesh=None,
+                     rules: str = "serve"):
     """Paged KV block pool; with ``mesh`` the pool tensors are laid out
     per the logical sharding rules (kvheads over 'model' when divisible,
     block/slot dims replicated — distributed.sharding.paged_cache_specs)
     so the engine's donated pool buffer keeps its placement across
-    steps."""
-    kv = transformer.init_paged_cache(cfg, num_blocks, block_size, dtype)
+    steps.  ``kv_spec`` (default ``cfg.kv_quant``) selects the quantized
+    codes+scales pool layout (repro.kvq)."""
+    kv = transformer.init_paged_cache(cfg, num_blocks, block_size, dtype,
+                                      kv_spec=kv_spec)
     if mesh is None:
         return kv
     from jax.sharding import NamedSharding, PartitionSpec as P

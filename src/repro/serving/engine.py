@@ -76,6 +76,18 @@ class Engine:
         pass something smaller to exercise preemption / save HBM.
     max_model_len : per-sequence position budget (prompt + generation).
     prefill_chunk : prefill token budget per engine iteration.
+    kv_quant : a ``repro.kvq.KVQuantSpec`` — store the paged pool as
+        low-bit codes + scales instead of ``cache_dtype`` values and
+        route paged attention through the registered kvq backends
+        (in-VMEM dequant on TPU, jnp gather+dequant reference
+        elsewhere).  None (default): the unchanged full-precision pool.
+    kv_pool_bytes : size the pool by a device-byte budget instead of
+        ``num_blocks`` (ignored when ``num_blocks`` is given): the pool
+        gets as many blocks as the budget buys at the *actual* storage
+        cost (repro.kvq.blocks_for_bytes), so quantized engines admit
+        proportionally more resident sequences — and the scheduler,
+        which admits against ``BlockPool.capacity``, sees that capacity
+        automatically.
     on_token : optional ``f(rid, token, text)`` streaming callback, called
         as each token is generated (text via the synthetic detokenizer).
     backend : force a registered dispatch backend by name for every
@@ -119,7 +131,10 @@ class Engine:
                  clock=time.perf_counter, sample_seed: int = 0,
                  backend: str | None = None, autotune: bool | str = False,
                  autotune_cache=None, mesh=None, mesh_rules: str = "serve",
-                 shard_collective: str = "psum"):
+                 shard_collective: str = "psum", kv_quant=None,
+                 kv_pool_bytes: int | None = None):
+        from repro import kvq
+
         self.mesh = mesh
         self.mesh_rules = mesh_rules
         self._input_shardings: dict = {}
@@ -127,12 +142,19 @@ class Engine:
             params = jax.device_put(params,
                                     shd.shardings(params, mesh, mesh_rules))
         self.params = params
+        if kv_quant is not None:
+            cfg = cfg.replace(kv_quant=kv_quant)
         self.cfg = cfg
         self.max_model_len = max_model_len or cfg.max_seq_len
         self.block_size = block_size
         self.max_blocks_per_seq = -(-self.max_model_len // block_size)
         if num_blocks is None:
-            num_blocks = max_slots * self.max_blocks_per_seq + 1
+            if kv_pool_bytes is not None:
+                num_blocks = kvq.blocks_for_bytes(
+                    cfg, kv_pool_bytes, block_size, cfg.kv_quant,
+                    cache_dtype)
+            else:
+                num_blocks = max_slots * self.max_blocks_per_seq + 1
         self.pool = BlockPool(num_blocks, block_size)
         self.kv = SV.init_paged_cache(cfg, num_blocks, block_size,
                                       cache_dtype, mesh=mesh,
@@ -149,6 +171,10 @@ class Engine:
         self.finished: list[Sequence] = []
         self.num_prefill_steps = 0
         self.num_decode_steps = 0
+        # peak concurrently-admitted sequences observed before the first
+        # preemption — the capacity headline BENCH_serve.json reports
+        self.max_resident_seqs = 0
+        self._export_kv_gauges(num_blocks, cache_dtype)
 
         def raw_step(params, pool, tokens, positions, wslots, vslots,
                      last_idx):
@@ -176,6 +202,36 @@ class Engine:
                 backend=backend, autotune=autotune,
                 shard_collective=shard_collective)
             self.exec_plans = self._resolve_plans(raw_step)
+
+    def _export_kv_gauges(self, num_blocks: int, cache_dtype) -> None:
+        """Pool-capacity gauges (kv_* prefix, NOT serving_*: capacity is
+        a property of the built engine, so ``reset_metrics`` between
+        measurement streams must not clear it)."""
+        from repro import kvq
+        from repro.kvq import attention as kvq_attn
+
+        reg = obs.registry()
+        spec = self.cfg.kv_quant
+        bpt = kvq.bytes_per_token(self.cfg, spec, cache_dtype)
+        reg.gauge("kv_pool_bytes",
+                  help="device bytes of the paged KV pool").set(
+            kvq.pool_bytes(self.cfg, num_blocks, self.block_size, spec,
+                           cache_dtype))
+        reg.gauge("kv_bytes_per_token",
+                  help="pool bytes per token slot across all layers"
+                  ).set(bpt)
+        reg.gauge("kv_capacity_seqs",
+                  help="max-length sequences the pool can hold").set(
+            (num_blocks - 1) // self.max_blocks_per_seq)
+        if spec is not None:
+            W = self.max_blocks_per_seq * self.block_size
+            reg.gauge(
+                "kv_dequant_hbm_bytes",
+                help="HBM bytes of dequantized K/V one layer-step "
+                     "materializes (0: in-kernel/VMEM dequant only)",
+                backend=kvq_attn.select(spec)).set(
+                kvq_attn.dequant_hbm_bytes(spec, self.cfg, self.max_slots,
+                                           W))
 
     def _mesh_ctx(self):
         return (shd.use(self.mesh, self.mesh_rules) if self.mesh is not None
@@ -285,6 +341,8 @@ class Engine:
         reg = obs.registry()
         depth = len(self.scheduler.waiting)
         running = len(self.scheduler.running)
+        if self.scheduler.num_preemptions == 0:
+            self.max_resident_seqs = max(self.max_resident_seqs, running)
         reg.gauge("serving_queue_depth",
                   help="waiting requests").set(depth)
         reg.gauge("serving_running_seqs",
@@ -445,6 +503,7 @@ class Engine:
         self.finished = []
         self.num_prefill_steps = 0
         self.num_decode_steps = 0
+        self.max_resident_seqs = 0
         self.scheduler.num_preemptions = 0
         self.scheduler.num_admitted = 0
         self.scheduler.num_evicted_blocks = 0
@@ -480,6 +539,7 @@ class Engine:
             "requests": len(fin),
             "generated_tokens": gen,
             "preemptions": self.scheduler.num_preemptions,
+            "max_resident_seqs": self.max_resident_seqs,
             "evicted_blocks": self.scheduler.num_evicted_blocks,
             "admitted": self.scheduler.num_admitted,
             "prefill_steps": self.num_prefill_steps,

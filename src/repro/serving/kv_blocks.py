@@ -33,6 +33,7 @@ class BlockPool:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: deque[int] = deque(range(1, num_blocks))
+        self._free_set: set[int] = set(self._free)
 
     @property
     def capacity(self) -> int:
@@ -50,13 +51,25 @@ class BlockPool:
         """All-or-nothing allocation of ``n`` blocks (None on exhaustion)."""
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
+        out = [self._free.popleft() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
 
     def free(self, blocks: list[int]) -> None:
+        """Return blocks to the free list.  Double-frees (and frees of
+        ids never allocated from this pool) raise instead of silently
+        corrupting the free list — a double-freed block would be handed
+        to two sequences at once and their K/V writes would interleave."""
         for b in blocks:
             if b == SCRATCH:
                 raise ValueError("attempt to free the scratch block")
+            if not 0 < b < self.num_blocks:
+                raise ValueError(f"block id {b} outside pool "
+                                 f"[1, {self.num_blocks})")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
             self._free.append(b)
+            self._free_set.add(b)
 
 
 def view_slots(blocks: list[int], max_blocks: int, block_size: int
@@ -73,8 +86,10 @@ def write_slots(blocks: list[int], start: int, count: int, pad_to: int,
                 block_size: int) -> np.ndarray:
     """Flat pool slots (pad_to,) where tokens at logical positions
     [start, start+count) scatter their K/V; tail padding goes to scratch."""
-    pos = np.arange(start, start + count, dtype=np.int64)
-    ids = np.asarray(blocks, np.int64)[pos // block_size]
+    # int32 throughout: these feed device-side scatters where x64-disabled
+    # JAX would silently truncate int64 indices
+    pos = np.arange(start, start + count, dtype=np.int32)
+    ids = np.asarray(blocks, np.int32)[pos // block_size]
     ws = ids * block_size + pos % block_size
-    pad = np.arange(pad_to - count, dtype=np.int64) % block_size  # scratch
+    pad = np.arange(pad_to - count, dtype=np.int32) % block_size  # scratch
     return np.concatenate([ws, pad]).astype(np.int32)
