@@ -1,0 +1,434 @@
+"""Chaos serving benchmark: drive the continuous-batching engine through
+every fault class in ``repro.faults.CLASSES`` (deterministic, seeded
+schedules) and measure what recovery actually costs.
+
+Per serving fault class the benchmark runs a Poisson request stream on a
+fresh msgemm-quantized engine with only that class armed, against a
+fault-free reference run of the *same* stream, and asserts the ISSUE's
+acceptance contract:
+
+* ``latency`` / ``oom`` / ``step_fail`` / ``disconnect`` — every
+  surviving request is **token-identical** to the reference (retries
+  re-run from the paged-KV state; preemption re-prefill is exact),
+* ``nan_logits`` / ``hang`` — the poisoned/stalled work is quarantined
+  or replanned (counted), everything else terminates cleanly,
+* every request reaches a terminal status; no exception escapes
+  ``Engine.step()``/``run()``.
+
+Artifact classes (``corrupt_plan_cache`` / ``corrupt_calibration`` /
+``corrupt_checkpoint``) corrupt the real on-disk artifact through the
+armed fault site and assert quarantine-and-rebuild: the reader counts
+``artifact_quarantined_total``, moves the corpse aside, and the next
+write/read round-trips cleanly.
+
+A final combined run arms all serving classes at once under a deadline +
+bounded queue and reports SLO attainment and shed rate.
+
+Results go to ``benchmarks/results/BENCH_chaos.json`` and the process
+exits non-zero if any class crashed or violated its contract — CI runs
+``python -m benchmarks.chaos_serve --faults all --fault-seed 0``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import dispatch, faults, obs
+from repro.core.spec import QuantSpec
+from repro.distributed.watchdog import Watchdog
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.quant import quantize_model
+from repro.serving import Engine, poisson_stream
+
+RESULTS_JSON = Path(__file__).parent / "results" / "BENCH_chaos.json"
+
+# BENCH_chaos.json schema history:
+#   1 — fault-tolerant serving PR: per-class {fires, statuses,
+#       token_identical, recovery_latency_s, counters}, artifact-class
+#       quarantine/rebuild results, and a combined-run SLO block
+BENCH_CHAOS_SCHEMA = 1
+
+CFG = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=211, max_seq_len=128)
+
+SERVE_CLASSES = ("latency", "oom", "nan_logits", "step_fail", "hang",
+                 "disconnect")
+ARTIFACT_CLASSES = ("corrupt_plan_cache", "corrupt_calibration",
+                    "corrupt_checkpoint")
+# classes whose surviving requests must match the reference bit-exactly;
+# nan/hang replan onto another backend whose float error (~1e-6) may
+# legally flip a greedy argmax, so they assert recovery + counters
+TOKEN_IDENTICAL = ("latency", "oom", "step_fail", "disconnect")
+
+# per-class schedules tuned so each class actually fires on a short
+# stream (the defaults target longer-lived servers)
+SPECS = {
+    "latency": "latency:p=1.0,after=2,max=3,mag=0.02",
+    "oom": "oom:p=0.5,after=1,max=4",
+    "nan_logits": "nan_logits:p=1.0,after=3,max=2",
+    "step_fail": "step_fail:p=1.0,after=2,max=2",
+    "hang": "hang:p=1.0,after=4,max=1,mag=0.1",
+    "disconnect": "disconnect:p=1.0,after=2,max=1",
+}
+
+
+def _build_model():
+    params = T.init_params(jax.random.PRNGKey(0), CFG)
+    spec = QuantSpec(mode="msgemm", d=3, scale_block=36)
+    return quantize_model(params, CFG, spec), CFG.replace(quant=spec)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("max_model_len", 64)
+    return Engine(params, cfg, **kw)
+
+
+def _stream(n, new_tokens, rate, seed):
+    return poisson_stream(n, CFG.vocab_size, max_new_tokens=new_tokens,
+                          rate=rate, min_prompt=3, max_prompt=12,
+                          seed=seed)
+
+
+def _drive(engine, reqs, plan=None):
+    """engine.run() with fire-time bookkeeping: wall seconds from the
+    first injected fault to the next request finishing ok after it."""
+    pending = sorted(reqs, key=lambda r: (r.arrival_time, r.rid))
+    results = {}
+    t_fire = t_recover = None
+    while pending or engine.scheduler.has_work():
+        while pending and pending[0].arrival_time <= engine.now:
+            req = pending.pop(0)
+            seq = engine.submit(req, arrival=min(req.arrival_time,
+                                                 engine.now))
+            if seq.status != "ok":
+                results[req.rid] = seq
+        if not engine.scheduler.has_work():
+            if not pending:
+                break
+            req = pending.pop(0)
+            seq = engine.submit(req)
+            if seq.status != "ok":
+                results[req.rid] = seq
+            continue
+        done = engine.step()
+        if plan is not None and t_fire is None and plan.fires() > 0:
+            t_fire = time.perf_counter()
+        for seq in done:
+            results[seq.req.rid] = seq
+            if t_fire is not None and t_recover is None \
+                    and seq.status == "ok":
+                t_recover = time.perf_counter()
+    rec = (t_recover - t_fire
+           if t_fire is not None and t_recover is not None else None)
+    return results, rec
+
+
+def _tokens(results):
+    return {rid: list(results[rid].generated) for rid in results
+            if results[rid].status == "ok"}
+
+
+def _reference(params, cfg, reqs):
+    obs.registry().reset(prefix="serving_")
+    eng = _engine(params, cfg)
+    res, _ = _drive(eng, reqs)
+    assert obs.registry().gauge("faults_armed").value == 0
+    assert all(s.status == "ok" for s in res.values())
+    return _tokens(res)
+
+
+def _chaos_class(cls, params, cfg, reqs, ref, seed):
+    obs.registry().reset(prefix="serving_")
+    dispatch.clear_quarantine()
+    wd = None
+    if cls == "hang":
+        wd = Watchdog(min_steps=2, min_timeout_s=0.05)
+    eng = _engine(params, cfg, watchdog=wd)
+    if cls == "hang":
+        # warm both phase compiles so the rolling step-time mean (and
+        # with it the armed hang timer) reflects steady-state steps
+        _drive(eng, [reqs[0]])
+        eng.reset_metrics()
+    plan = faults.arm(SPECS[cls], seed=seed)
+    try:
+        res, recovery = _drive(eng, reqs)
+    finally:
+        faults.disarm()
+        dispatch.clear_quarantine()
+    statuses = {rid: res[rid].status for rid in res}
+    missing = [r.rid for r in reqs if r.rid not in res]
+    toks = _tokens(res)
+    identical = all(toks[rid] == ref[rid] for rid in toks)
+    out = {
+        "cls": cls,
+        "fires": plan.fires(),
+        "requests": len(reqs),
+        "terminal": len(res),
+        "statuses": sorted(statuses.values()),
+        "ok": sum(1 for s in statuses.values() if s == "ok"),
+        "token_identical": identical,
+        "recovery_latency_s": recovery,
+        "step_retries": eng.num_step_retries,
+        "nan_quarantined": eng.num_nan_events,
+        "replans": eng.num_replans,
+        "shed": eng.num_shed,
+        "preempt_thrash": eng.scheduler.num_thrash,
+    }
+    errs = []
+    if plan.fires() == 0:
+        errs.append("fault never fired")
+    if missing:
+        errs.append(f"requests never terminated: {missing}")
+    if cls in TOKEN_IDENTICAL and not identical:
+        errs.append("surviving requests diverged from reference")
+    if cls in ("latency", "oom", "step_fail") and out["ok"] != len(reqs):
+        errs.append(f"expected full recovery, got {statuses}")
+    if cls == "nan_logits" and eng.num_nan_events == 0:
+        errs.append("nan guard never quarantined")
+    if cls == "hang" and (wd.hang_count == 0 or eng.num_replans == 0):
+        errs.append(f"hang not escalated (hangs={wd.hang_count}, "
+                    f"replans={eng.num_replans})")
+    if cls == "disconnect" and "disconnected" not in statuses.values():
+        errs.append("disconnect victim not recorded")
+    out["errors"] = errs
+    return out
+
+
+def _counter(artifact):
+    """Sum of artifact_quarantined_total across ``reason`` labels."""
+    return sum(s.value for s in obs.registry().series("counter")
+               if s.name == "artifact_quarantined_total"
+               and s.labels.get("artifact") == artifact)
+
+
+def _chaos_plan_cache(tmp, seed):
+    path = Path(tmp) / "plans.json"
+    dispatch.set_cache_path(path)
+    plan = dispatch.ExecPlan(backend="msgemm_jnp")
+    before = _counter("plan_cache")
+    faults.arm("corrupt_plan_cache", seed=seed)
+    try:
+        dispatch.cache().put("chaos|test", plan)  # save() -> corrupted
+    finally:
+        faults.disarm()
+    reloaded = dispatch.set_cache_path(path)  # fresh cache object
+    n_after_corrupt = len(reloaded)  # load quarantines, rebuilds empty
+    quarantined = _counter("plan_cache") - before
+    dispatch.cache().put("chaos|test", plan)  # rebuild
+    n_rebuilt = len(dispatch.set_cache_path(path))
+    dispatch.set_cache_path(None)
+    errs = []
+    if n_after_corrupt != 0:
+        errs.append("corrupt cache served plans")
+    if quarantined < 1:
+        errs.append("corrupt cache not quarantined")
+    if n_rebuilt != 1:
+        errs.append("cache did not rebuild")
+    return {"cls": "corrupt_plan_cache", "fires": 1,
+            "quarantined": quarantined, "rebuilt": n_rebuilt == 1,
+            "errors": errs}
+
+
+def _chaos_calibration(tmp, seed):
+    from repro.obs import perfmodel as pm
+
+    path = Path(tmp) / "calibration.json"
+    device, interpret = pm.current_partition()
+    cal = pm.Calibration(device=device, interpret=interpret,
+                         constants={"*": {"launch_s": 1e-6, "step_s": 1e-8,
+                                          "produce_s_per_flop": 1e-9,
+                                          "consume_s_per_op": 1e-9,
+                                          "hbm_s_per_byte": 1e-10}},
+                         fit={"n_samples": 4})
+    before = _counter("calibration")
+    faults.arm("corrupt_calibration", seed=seed)
+    try:
+        cal.save(path)
+    finally:
+        faults.disarm()
+    corrupt_load = pm.load_calibration(path)  # quarantines, returns None
+    quarantined = _counter("calibration") - before
+    cal.save(path)  # rebuild
+    ok_load = pm.load_calibration(path)
+    errs = []
+    if corrupt_load is not None:
+        errs.append("corrupt calibration loaded")
+    if quarantined < 1:
+        errs.append("corrupt calibration not quarantined")
+    if ok_load is None:
+        errs.append("calibration did not rebuild")
+    return {"cls": "corrupt_calibration", "fires": 1,
+            "quarantined": quarantined, "rebuilt": ok_load is not None,
+            "errors": errs}
+
+
+def _chaos_checkpoint(tmp, seed):
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(Path(tmp) / "ckpt"), keep=3)
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones((4,), np.float32)}
+    mgr.save(1, tree)
+    before = _counter("checkpoint")
+    # the next save's publish gets corrupted (armed only around it)
+    faults.arm("corrupt_checkpoint", seed=seed)
+    try:
+        mgr.save(2, tree)
+    finally:
+        faults.disarm()
+    step, restored = mgr.restore_latest(tree)
+    quarantined = _counter("checkpoint") - before
+    errs = []
+    if step != 1:
+        errs.append(f"restore_latest fell back to {step}, expected 1")
+    if quarantined < 1:
+        errs.append("corrupt checkpoint not quarantined")
+    if restored is None or not np.array_equal(restored["w"], tree["w"]):
+        errs.append("restored tree does not match")
+    return {"cls": "corrupt_checkpoint", "fires": 1,
+            "quarantined": quarantined,
+            "rebuilt": step == 1 and restored is not None,
+            "errors": errs}
+
+
+def _chaos_combined(params, cfg, reqs, seed):
+    """All serving classes at once, under a deadline and a bounded
+    queue: the server must stay up and every request must reach a
+    terminal status — finished, shed, or cleanly cancelled."""
+    obs.registry().reset(prefix="serving_")
+    dispatch.clear_quarantine()
+    spec = ";".join(SPECS[c] for c in SERVE_CLASSES)
+    eng = _engine(params, cfg, max_queue=8, deadline_s=30.0,
+                  watchdog=Watchdog(min_steps=2, min_timeout_s=0.05))
+    _drive(eng, [reqs[0]])
+    eng.reset_metrics()
+    plan = faults.arm(spec, seed=seed)
+    try:
+        res, recovery = _drive(eng, reqs)
+    finally:
+        faults.disarm()
+        dispatch.clear_quarantine()
+    statuses = [res[rid].status for rid in sorted(res)]
+    missing = [r.rid for r in reqs if r.rid not in res]
+    ok = sum(1 for s in statuses if s == "ok")
+    m = eng.metrics()
+    errs = []
+    if missing:
+        errs.append(f"requests never terminated: {missing}")
+    if plan.fires() == 0:
+        errs.append("combined plan never fired")
+    out = {
+        "cls": "combined", "fires": plan.fires(), "requests": len(reqs),
+        "terminal": len(res), "statuses": sorted(statuses), "ok": ok,
+        "slo_attainment": ok / len(reqs) if reqs else 1.0,
+        "shed_rate": m["shed"] / len(reqs) if reqs else 0.0,
+        "recovery_latency_s": recovery,
+        "step_retries": m["step_retries"], "replans": m["replans"],
+        "nan_quarantined": m["nan_quarantined"],
+        "errors": errs,
+    }
+    return out
+
+
+def run(*, fault_spec="all", seed=0, n_requests=4, new_tokens=6,
+        rate=0.0) -> tuple[list[str], dict]:
+    params, cfg = _build_model()
+    reqs = _stream(n_requests, new_tokens, rate, seed=1)
+    picked = (list(SERVE_CLASSES) + list(ARTIFACT_CLASSES)
+              if fault_spec == "all"
+              else [s.cls for s in faults.parse_spec(fault_spec)])
+    lines = ["name,us_per_call,derived"]
+    ref = _reference(params, cfg, reqs)
+    rows, crashed = [], []
+    with tempfile.TemporaryDirectory(prefix="chaos_") as tmp:
+        for cls in picked:
+            try:
+                if cls == "corrupt_plan_cache":
+                    row = _chaos_plan_cache(tmp, seed)
+                elif cls == "corrupt_calibration":
+                    row = _chaos_calibration(tmp, seed)
+                elif cls == "corrupt_checkpoint":
+                    row = _chaos_checkpoint(tmp, seed)
+                else:
+                    row = _chaos_class(cls, params, cfg, reqs, ref, seed)
+            except Exception:
+                faults.disarm()
+                dispatch.clear_quarantine()
+                row = {"cls": cls, "errors":
+                       [f"CRASH: {traceback.format_exc(limit=8)}"]}
+            rows.append(row)
+            if row["errors"]:
+                crashed.append(cls)
+            rec = row.get("recovery_latency_s")
+            lines.append(
+                f"chaos/{cls},{(rec or 0.0) * 1e6:.1f},"
+                f"fires={row.get('fires', 0)} ok={row.get('ok', '-')} "
+                f"errors={len(row['errors'])}")
+        if fault_spec == "all" and not crashed:
+            try:
+                row = _chaos_combined(params, cfg, reqs, seed)
+            except Exception:
+                faults.disarm()
+                dispatch.clear_quarantine()
+                row = {"cls": "combined", "errors":
+                       [f"CRASH: {traceback.format_exc(limit=8)}"]}
+            rows.append(row)
+            if row["errors"]:
+                crashed.append("combined")
+            lines.append(
+                f"chaos/combined,0.0,"
+                f"slo={row.get('slo_attainment', 0):.2f} "
+                f"shed_rate={row.get('shed_rate', 0):.2f} "
+                f"errors={len(row['errors'])}")
+    doc = {"schema_version": BENCH_CHAOS_SCHEMA, "fault_seed": seed,
+           "requests": n_requests, "new_tokens": new_tokens, "rate": rate,
+           "classes": rows, "failed_classes": crashed}
+    return lines, doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--faults", default="all",
+                    help="'all' or a repro.faults spec string naming the "
+                         "classes to chaos-test")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=6)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s; <=0 all at t=0)")
+    ap.add_argument("--json", default=str(RESULTS_JSON))
+    args = ap.parse_args(argv)
+
+    lines, doc = run(fault_spec=args.faults, seed=args.fault_seed,
+                     n_requests=args.requests, new_tokens=args.new_tokens,
+                     rate=args.rate)
+    print("\n".join(lines))
+    out = Path(args.json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out}")
+    if doc["failed_classes"]:
+        for row in doc["classes"]:
+            for e in row["errors"]:
+                print(f"FAIL {row['cls']}: {e}", file=sys.stderr)
+        return 1
+    print(f"chaos: {len(doc['classes'])} classes survived, "
+          f"0 contract violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

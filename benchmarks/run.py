@@ -49,7 +49,7 @@ def _roofline_lines() -> list[str]:
 
 
 SUITES = ("fig3", "complexity", "phase_rates", "walltime",
-          "serve_throughput", "roofline", "kernels")
+          "serve_throughput", "roofline", "kernels", "chaos")
 
 
 def main() -> None:
@@ -73,6 +73,13 @@ def main() -> None:
             out += m.run()
         elif name == "roofline":
             out += _roofline_lines()
+        elif name == "chaos":
+            from benchmarks import chaos_serve as m
+            lines, doc = m.run()
+            out += lines
+            if doc["failed_classes"]:
+                raise SystemExit(
+                    f"chaos contract violations: {doc['failed_classes']}")
         elif name == "kernels":
             from benchmarks import kernel_microbench as m
             res = m.run(shapes=m.SMOKE_SHAPES, reps=2)

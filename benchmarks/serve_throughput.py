@@ -211,9 +211,9 @@ def _continuous(params, rates=(0.0, 100.0, 25.0), n=10, new_tokens=10
             lines.append(
                 f"serve_throughput/{tag},{1e6 / s['tok_per_s']:.1f},"
                 f"tok_per_s={s['tok_per_s']:.1f} "
-                f"p50_ms={s['latency_p50_s'] * 1e3:.1f} "
-                f"p95_ms={s['latency_p95_s'] * 1e3:.1f} "
-                f"ttft_p50_ms={s['ttft_p50_s'] * 1e3:.1f} "
+                f"p50_ms={(s['latency_p50_s'] or 0.0) * 1e3:.1f} "
+                f"p95_ms={(s['latency_p95_s'] or 0.0) * 1e3:.1f} "
+                f"ttft_p50_ms={(s['ttft_p50_s'] or 0.0) * 1e3:.1f} "
                 f"preemptions={s['preemptions']} "
                 f"evicted_blocks={s['evicted_blocks']} "
                 f"queue_p95={qd['p95']:g}")

@@ -54,6 +54,7 @@ for rid in sorted(results):
           f"ttft={m['ttft_s'] * 1e3:6.1f}ms lat={m['latency_s'] * 1e3:6.1f}ms")
 s = engine.summary()
 print(f"\n{s['requests']} requests, {s['generated_tokens']} tokens, "
-      f"{s['tok_per_s']:.1f} tok/s, p50 latency {s['latency_p50_s'] * 1e3:.0f}ms, "
-      f"p95 {s['latency_p95_s'] * 1e3:.0f}ms, "
+      f"{s['tok_per_s']:.1f} tok/s, "
+      f"p50 latency {(s['latency_p50_s'] or 0.0) * 1e3:.0f}ms, "
+      f"p95 {(s['latency_p95_s'] or 0.0) * 1e3:.0f}ms, "
       f"{s['preemptions']} preemptions")

@@ -10,6 +10,12 @@ Layout (one directory per step)::
 
 Atomicity = write-to-tmp + rename, so a crash mid-save never corrupts the
 latest checkpoint; `latest_step` only ever sees complete directories.
+On top of that, manifests carry a CRC32 per leaf file: a bit-rotted or
+truncated checkpoint fails verification on restore, the whole step
+directory is quarantined aside (``step_N.quarantined``, counted by
+``artifact_quarantined_total{artifact="checkpoint"}``), and
+``restore_latest`` falls back to the newest step that verifies — a
+corrupt latest checkpoint costs one step of progress, never the server.
 Restore is *elastic*: leaves are saved unsharded (gathered) and re-placed
 with whatever shardings the new mesh prescribes, so restarting on a
 different mesh shape (or chip count) re-shards transparently — the
@@ -20,11 +26,27 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _file_crc(path: str) -> str:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
+class CheckpointCorrupt(ValueError):
+    """A checkpoint step failed manifest/CRC verification."""
 
 
 class CheckpointManager:
@@ -42,9 +64,12 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
-                    out.append(int(name.split("_")[1]))
+            # strict match skips .tmp dirs, quarantined corpses
+            # (step_N.quarantined), and any stray files
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> int | None:
@@ -73,14 +98,22 @@ class CheckpointManager:
                     stored = a.astype(np.float32)
                 np.save(os.path.join(tmp, name), stored)
                 index.append({"file": name, "shape": list(a.shape),
-                              "dtype": str(a.dtype)})
+                              "dtype": str(a.dtype),
+                              "crc": _file_crc(os.path.join(tmp, name))})
             manifest = {"step": step, "leaves": index,
                         "treedef": str(treedef), "extra": extra or {}}
+            from repro.obs import artifacts
+            artifacts.stamp_crc(manifest)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.replace(tmp, final)  # atomic publish
+            from repro import faults
+            ev = faults.fire("corrupt_checkpoint")
+            if ev is not None:
+                faults.corrupt_file(
+                    os.path.join(final, "manifest.json"), ev)
             self._gc()
 
         if self.async_save:
@@ -107,8 +140,7 @@ class CheckpointManager:
         """
         self.wait()
         d = self._step_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = self._verify(step)
         leaves, treedef = jax.tree.flatten(target_tree)
         if len(leaves) != len(manifest["leaves"]):
             raise ValueError(
@@ -126,8 +158,58 @@ class CheckpointManager:
                        else jax.numpy.asarray(a))
         return jax.tree.unflatten(treedef, out)
 
+    def _verify(self, step: int) -> dict:
+        """Parse + CRC-verify a step's manifest and leaf files; returns
+        the manifest or raises :class:`CheckpointCorrupt`."""
+        from repro.obs import artifacts
+
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            if not isinstance(manifest, dict) or \
+                    not isinstance(manifest.get("leaves"), list):
+                raise ValueError("bad manifest schema")
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable manifest ({e})") from None
+        if not artifacts.check_crc(manifest):
+            raise CheckpointCorrupt(f"step {step}: manifest CRC mismatch")
+        for meta in manifest["leaves"]:
+            want = meta.get("crc")
+            if want is None:
+                continue  # legacy checkpoint without leaf CRCs
+            path = os.path.join(d, meta["file"])
+            try:
+                got = _file_crc(path)
+            except OSError:
+                raise CheckpointCorrupt(
+                    f"step {step}: missing leaf {meta['file']}") from None
+            if got != want:
+                raise CheckpointCorrupt(
+                    f"step {step}: leaf {meta['file']} CRC "
+                    f"{got} != {want}")
+        return manifest
+
+    def quarantine(self, step: int, reason: str = "corrupt"):
+        """Move a corrupt step directory aside and count it."""
+        from repro.obs import artifacts
+
+        return artifacts.quarantine(
+            self._step_dir(step), "checkpoint", reason=reason)
+
     def restore_latest(self, target_tree, *, shardings=None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, target_tree, shardings=shardings)
+        """Restore the newest step that passes verification.  Corrupt
+        steps are quarantined aside and the next older one is tried —
+        ``(None, None)`` only when no step verifies."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, target_tree,
+                                          shardings=shardings)
+            except CheckpointCorrupt as e:
+                self.quarantine(step)
+                import logging
+                logging.getLogger(__name__).warning(
+                    "quarantined corrupt checkpoint: %s", e)
+        return None, None

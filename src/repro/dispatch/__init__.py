@@ -22,8 +22,9 @@ from repro import obs
 from repro.core.epilogue import Epilogue, apply_epilogue  # noqa: F401
 from repro.core.spec import QuantSpec, as_spec
 from repro.dispatch.registry import (  # noqa: F401
-    Backend, available_backends, backend_names, device_kind, get_backend,
-    register_backend, select_backend, unregister_backend,
+    Backend, available_backends, backend_names, clear_quarantine,
+    device_kind, get_backend, is_quarantined, quarantine_backend,
+    quarantined, register_backend, select_backend, unregister_backend,
 )
 from repro.dispatch.plan import (  # noqa: F401
     DEFAULT_POLICY, ExecPlan, ExecPolicy, PlanRequest, collecting,

@@ -86,8 +86,15 @@ class PlanCache:
     # ------------------------------------------------------------- io
     def load(self) -> "PlanCache":
         self._loaded = True
+        from repro.obs import artifacts
+
+        # parse + CRC check; a corrupt file is quarantined aside
+        # (artifact_quarantined_total{artifact="plan_cache"}) and the
+        # cache rebuilds empty — warm restarts survive bit rot.
+        raw = artifacts.load_json_checked(self.path, "plan_cache")
+        if raw is None:
+            return self
         try:
-            raw = json.loads(self.path.read_text())
             ver = raw.get("version")
             if ver not in (2, _CACHE_VERSION):
                 return self
@@ -110,11 +117,18 @@ class PlanCache:
             t = raw.get("timings")
             if isinstance(t, dict):
                 self._timings.update(t)
-        except (OSError, ValueError, TypeError):
-            pass  # absent/corrupt cache -> start empty
+        except (ValueError, TypeError, AttributeError):
+            # parsed + CRC-clean but schema-invalid (e.g. hand-edited):
+            # quarantine like any other corruption and start empty
+            self._plans.clear()
+            self._timings.clear()
+            artifacts.quarantine(self.path, "plan_cache", reason="schema")
         return self
 
     def save(self) -> None:
+        from repro import faults
+        from repro.obs import artifacts
+
         payload = {"version": _CACHE_VERSION, "plans": {
             key: {f: getattr(p, f) for f in _PLAN_FIELDS
                   if getattr(p, f) is not None}
@@ -122,10 +136,10 @@ class PlanCache:
         if self._timings:
             payload["timings"] = {k: self._timings[k]
                                   for k in sorted(self._timings)}
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(payload, indent=1))
-        tmp.replace(self.path)
+        artifacts.atomic_write_json(self.path, artifacts.stamp_crc(payload))
+        ev = faults.fire("corrupt_plan_cache")
+        if ev is not None:
+            faults.corrupt_file(self.path, ev)
 
     # ----------------------------------------------------------- plans
     def get(self, key: str) -> ExecPlan | None:

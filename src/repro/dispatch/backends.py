@@ -126,9 +126,34 @@ def run_msgemm_pallas(spec, plan, params, x, *, k, precision=None,
     return y.T.reshape(*batch, -1).astype(_out_dtype(epilogue, x))
 
 
+def run_dense_fallback(spec, plan, params, x, *, k, precision=None,
+                       epilogue=None, bias=None, residual=None):
+    """Dequantize to dense and matmul — numerically the quantization
+    round-trip (same weights every other backend sees), executed on the
+    plain MXU path.  The bottom rung of the degradation ladder: always
+    available, no LUT/Pallas machinery to go wrong."""
+    m = params["scales"].shape[0]
+    d = spec.resolve_d(k, m)
+    codes = _linear._codes(params, spec, k, d)
+    qt = scales.QuantizedTensor(
+        codes=codes, scales=params["scales"], block=spec.scale_block,
+        shape=(codes.shape[0], k), codebook=params.get("codebook"))
+    w = scales.dequantize(qt, x.dtype)
+    return _dot_rows(x, w)
+
+
 register_backend(
     "dense", modes=("bf16",), run=run_dense, priority=100,
     description="dense MXU matmul (the paper's naive GeMM, Eq. 14)")
+
+# Last-resort safe path for quantized modes: priority below every
+# specialized backend, selected only when the rest of the ladder is
+# quarantined (NaN guard / watchdog escalation) or unavailable.
+register_backend(
+    "dense_fallback", modes=("msgemm", "int4_dequant"),
+    run=run_dense_fallback, priority=-100,
+    description="dequantize -> dense MXU matmul; quarantine-safe bottom "
+                "rung of the degradation ladder (pallas -> jnp -> dense)")
 
 register_backend(
     "msgemm_jnp", modes=("msgemm",), run=run_msgemm_jnp, priority=50,

@@ -316,7 +316,10 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
         # keeps model-wide --backend flags working on models that mix
         # modes per layer (MoE experts run int4_dequant inside an
         # msgemm model).
-        if forced.supports(spec, d):
+        # a quarantined forced backend degrades to auto-selection —
+        # same ladder the NaN guard / watchdog escalation rely on
+        if forced.supports(spec, d) and not registry.is_quarantined(
+                forced.name):
             be = forced
     if be is None:
         be = registry.select_backend(spec, d, device)

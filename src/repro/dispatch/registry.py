@@ -77,6 +77,47 @@ class Backend:
 
 _REGISTRY: dict[str, Backend] = {}
 
+# Runtime quarantine: backend name -> reason.  A quarantined backend is
+# skipped by auto-selection and by forced-policy resolution so a
+# misbehaving execution path (NaN logits, watchdog hang) degrades to the
+# next backend on the ladder instead of crashing the server.  Quarantine
+# is process-local, never persisted, and cleared by clear_quarantine().
+_QUARANTINED: dict[str, str] = {}
+
+
+def quarantine_backend(name: str, reason: str = "") -> None:
+    """Mark a backend suspect; selection skips it until cleared.  The
+    dense fallback ladder guarantees a safe backend always remains, but
+    if quarantine would leave a spec with zero candidates, selection
+    ignores the quarantine rather than fail (see available_backends)."""
+    get_backend(name)  # raise on unknown names
+    _QUARANTINED[name] = reason or "quarantined"
+    from repro import obs
+    obs.registry().counter(
+        "dispatch_backend_quarantined_total", backend=name).inc()
+    obs.registry().gauge("dispatch_backends_quarantined").set(
+        len(_QUARANTINED))
+
+
+def clear_quarantine(name: str | None = None) -> None:
+    """Lift quarantine for one backend, or all when name is None."""
+    if name is None:
+        _QUARANTINED.clear()
+    else:
+        _QUARANTINED.pop(name, None)
+    from repro import obs
+    obs.registry().gauge("dispatch_backends_quarantined").set(
+        len(_QUARANTINED))
+
+
+def is_quarantined(name: str) -> bool:
+    return name in _QUARANTINED
+
+
+def quarantined() -> dict[str, str]:
+    """Snapshot of the current quarantine list (name -> reason)."""
+    return dict(_QUARANTINED)
+
 
 def register_backend(name: str, *, modes, run, is_available=_always,
                      priority: int = 0, d_range=(1, 4),
@@ -128,6 +169,11 @@ def available_backends(spec: QuantSpec, d: int, device: str | None = None
     dev = device or device_kind()
     cands = [b for b in _REGISTRY.values()
              if b.supports(spec, d) and b.is_available(dev)]
+    if _QUARANTINED:
+        healthy = [b for b in cands if b.name not in _QUARANTINED]
+        # never quarantine into an empty candidate set — serving a
+        # suspect backend beats serving nothing
+        cands = healthy or cands
     return sorted(cands, key=lambda b: (-b.priority_for(dev), b.name))
 
 

@@ -27,6 +27,10 @@ class Watchdog:
     z_threshold: float = 4.0
     hang_factor: float = 10.0
     min_steps: int = 5
+    # floor on the hang timeout: mean*hang_factor can be microseconds on
+    # tiny models, which would fire on any GC pause.  Serving (and fast
+    # tests) lower it deliberately.
+    min_timeout_s: float = 1.0
     on_straggler: callable = None
     on_hang: callable = None
     _times: deque = field(default_factory=lambda: deque(maxlen=200))
@@ -45,7 +49,7 @@ class Watchdog:
         self._t0 = time.monotonic()
         if len(self._times) >= self.min_steps:
             mean, _ = self._stats()
-            timeout = max(mean * self.hang_factor, 1.0)
+            timeout = max(mean * self.hang_factor, self.min_timeout_s)
             self._timer = threading.Timer(timeout, self._hang)
             self._timer.daemon = True
             self._timer.start()

@@ -203,7 +203,11 @@ def run_continuous(args, params, cfg, mesh=None):
                     shard_collective=args.shard_collective,
                     kv_quant=kv_spec,
                     kv_pool_bytes=(int(args.kv_pool_mib * 2**20)
-                                   if args.kv_pool_mib else None))
+                                   if args.kv_pool_mib else None),
+                    max_queue=args.max_queue or None,
+                    deadline_s=args.deadline_s or None,
+                    ttft_deadline_s=args.ttft_deadline_s or None,
+                    watchdog=args.watchdog or None)
     if mesh is not None:
         n_sharded = sum(1 for p in engine.exec_plans.values()
                         if p.shard is not None)
@@ -226,26 +230,40 @@ def run_continuous(args, params, cfg, mesh=None):
     for rid in sorted(results):
         seq = results[rid]
         m = seq.metrics()
+        if m["status"] != "ok":
+            print(f"  req {rid}: prompt={m['prompt_tokens']:3d} "
+                  f"new={m['new_tokens']:3d} status={m['status']}")
+            continue
         print(f"  req {rid}: prompt={m['prompt_tokens']:3d} "
               f"new={m['new_tokens']:3d} ttft={m['ttft_s'] * 1e3:7.1f}ms "
               f"lat={m['latency_s'] * 1e3:7.1f}ms "
               f"preempt={m['preemptions']} tok={seq.generated[:8]}")
     s = engine.summary()
+    # percentiles are None when nothing finished — coalesce for display
     print(f"[serve] {s['generated_tokens']} tokens in {dt:.2f}s "
-          f"({s['tok_per_s']:.1f} tok/s) p50={s['latency_p50_s'] * 1e3:.1f}ms "
-          f"p95={s['latency_p95_s'] * 1e3:.1f}ms "
+          f"({s['tok_per_s']:.1f} tok/s) "
+          f"p50={(s['latency_p50_s'] or 0.0) * 1e3:.1f}ms "
+          f"p95={(s['latency_p95_s'] or 0.0) * 1e3:.1f}ms "
           f"preemptions={s['preemptions']}")
+    if s["shed"] or s["cancelled"] or s["step_retries"] or s["replans"]:
+        print(f"[serve] resilience: shed={s['shed']} "
+              f"cancelled={s['cancelled']} retries={s['step_retries']} "
+              f"nan_quarantined={s['nan_quarantined']} "
+              f"replans={s['replans']}")
 
     if args.check:
+        live = {rid: seq for rid, seq in results.items()
+                if seq.status == "ok"}
         bad = 0
-        for rid, seq in results.items():
+        for rid, seq in live.items():
             toks = np.array([list(seq.req.prompt)], np.int32)
             ref = SV.generate(params, cfg, {"tokens": toks},
                               max_new_tokens=seq.req.max_new_tokens)
             if [int(t) for t in np.asarray(ref)[0]] != seq.generated:
                 bad += 1
         print(f"[serve] static-path parity check: "
-              f"{len(results) - bad}/{len(results)} identical")
+              f"{len(live) - bad}/{len(live)} identical "
+              f"({len(results) - len(live)} non-ok skipped)")
         if bad:
             raise SystemExit("continuous engine diverged from static path")
     return results
@@ -287,6 +305,25 @@ def main(argv=None):
                          "proportionally more blocks")
     ap.add_argument("--check", action="store_true",
                     help="assert token parity vs the static generate path")
+    # resilience (continuous engine; README §Resilience)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="shed submissions beyond this waiting-queue "
+                         "depth (0: unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0,
+                    help="default per-request total-latency SLO; expired "
+                         "requests are cancelled cleanly (0: none)")
+    ap.add_argument("--ttft-deadline-s", type=float, default=0,
+                    help="default first-token SLO (0: none)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="arm the per-step hang watchdog (hangs escalate "
+                         "to a backend quarantine + replan)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm deterministic fault injection: 'all' or "
+                         "'cls:p=..,after=..,max=..,mag=..;cls2' "
+                         "(classes: repro.faults.CLASSES; overrides "
+                         "REPRO_FAULTS)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the injected-fault schedule")
     # execution planning (repro.dispatch)
     ap.add_argument("--backend", default="auto",
                     choices=["auto"] + dispatch.backend_names(),
@@ -340,6 +377,20 @@ def main(argv=None):
 
     force_host_devices(args.force_host_devices)
     mesh = parse_mesh(args.mesh) if args.mesh else None
+
+    from repro import faults
+
+    if args.faults:
+        plan = faults.FaultPlan(faults.parse_spec(args.faults),
+                                seed=args.fault_seed)
+        faults.arm(plan)
+        print(f"[serve] fault injection armed: {plan.describe()}")
+    else:
+        plan = faults.plan_from_env()  # REPRO_FAULTS / REPRO_FAULT_SEED
+        if plan is not None:
+            faults.arm(plan)
+            print(f"[serve] fault injection armed from env: "
+                  f"{plan.describe()}")
 
     # tracing must be on BEFORE the engine builds/compiles: jit marks are
     # staged at trace time, so a later enable would record host spans but

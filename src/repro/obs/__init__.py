@@ -20,6 +20,15 @@ zero-overhead assertions).
 
 from repro.obs import costs  # noqa: F401  (re-export module)
 from repro.obs import perfmodel  # noqa: F401  (re-export module)
+
+
+def __getattr__(name):
+    # lazy: obs.artifacts imports repro.obs back for the registry, so a
+    # top-level import here would be circular
+    if name == "artifacts":
+        import importlib
+        return importlib.import_module("repro.obs.artifacts")
+    raise AttributeError(name)
 from repro.obs.metrics import (  # noqa: F401
     Registry,
     SNAPSHOT_SCHEMA_VERSION,

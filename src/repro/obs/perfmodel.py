@@ -264,11 +264,14 @@ class Calibration:
                 "created_unix": self.created_unix}
 
     def save(self, path: str | os.PathLike) -> Path:
+        from repro import faults
+        from repro.obs import artifacts
+
         p = Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(self.as_dict(), indent=1))
-        tmp.replace(p)
+        artifacts.atomic_write_json(p, artifacts.stamp_crc(self.as_dict()))
+        ev = faults.fire("corrupt_calibration")
+        if ev is not None:
+            faults.corrupt_file(p, ev)
         return p
 
 
@@ -334,9 +337,13 @@ def load_calibration(path: str | os.PathLike | None = None, *,
     (missing, corrupt, wrong version, wrong partition, or older than
     ``max_age_s``: every 'stale' case a consumer must fall back on)."""
     p = Path(path) if path is not None else default_calibration_path()
-    try:
-        doc = json.loads(p.read_text())
-    except (OSError, ValueError):
+    from repro.obs import artifacts
+
+    # parse + CRC check; corruption quarantines the file aside
+    # (artifact_quarantined_total{artifact="calibration"}) and callers
+    # fall back to uncalibrated heuristics, same as a missing file.
+    doc = artifacts.load_json_checked(p, "calibration")
+    if doc is None:
         return None
     if validate_calibration(doc):
         return None

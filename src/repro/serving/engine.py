@@ -16,19 +16,32 @@ Greedy outputs are token-identical to the static ``runtime.serve.generate``
 path for the same prompts (asserted in tests/test_serving.py): chunked
 prefill is mathematically exact, and the paged attention view masks
 non-owned slots to probability exactly 0.
+
+Resilience (README §Resilience has the full taxonomy): per-request
+deadlines with clean cancellation, queue-depth + deadline-aware load
+shedding, bounded step retry with exponential backoff (token-identical —
+the retried call re-runs from the sequence's paged-KV state), a NaN/Inf
+logit guard that quarantines the offending sequence and on repeat
+quarantines the suspect dispatch backend and replans down the
+degradation ladder, and watchdog hang escalation doing the same.  All
+fault *injection* lives behind ``repro.faults`` (zero overhead when
+disarmed); the tolerance paths above are always on.
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import dispatch, obs
+from repro import dispatch, faults, obs
 from repro.distributed import sharding as shd
+from repro.distributed.watchdog import Watchdog
 from repro.models.config import ModelConfig
 from repro.runtime import serve as SV
 from repro.serving import kv_blocks
@@ -114,6 +127,30 @@ class Engine:
         with no FSDP gathers on the hot path.
     shard_collective : 'psum' | 'reduce_scatter' — how row-parallel
         (contraction-sharded) linears resolve partial sums.
+    max_queue : admission control — reject (shed) new submissions when
+        the waiting queue is already this deep (None: unbounded, the
+        historic behavior).  Shed requests come back with status 'shed'
+        and count into ``serving_shed_total``.
+    deadline_s / ttft_deadline_s : engine-wide default SLOs applied to
+        requests that don't carry their own ``Request.deadline_s`` /
+        ``ttft_deadline_s`` (None: no deadline).  Expired requests are
+        cancelled cleanly with status 'deadline'; a deadline-carrying
+        request whose budget is already hopeless against the p95 queue
+        wait is shed at submission.
+    step_retries / retry_backoff_s : bounded retry of a failed engine
+        step with exponential backoff.  The retried call re-runs from
+        the sequence's paged-KV state, so recovered output is
+        token-identical.  If a failure inside the jitted call consumed
+        the donated pool buffer, the engine rebuilds the pool and
+        re-prefills everything (also token-exact) instead of retrying.
+    watchdog : a ``distributed.watchdog.Watchdog`` (or True for a
+        serving-tuned default) that times every step; a hang escalates
+        after the step returns — suspect backend quarantined, step
+        replanned on the remaining ladder, serving continues.  None
+        (default): no per-step timers.
+    nan_replan_after : total non-finite-logit events after which the
+        guard also quarantines the suspect backend and replans (each
+        event always quarantines the offending *sequence*).
 
     Decode tile presets: plans are resolved per phase shape, so the
     decode batch (max_slots rows of 1 token) plans with its *actual*
@@ -132,7 +169,13 @@ class Engine:
                  backend: str | None = None, autotune: bool | str = False,
                  autotune_cache=None, mesh=None, mesh_rules: str = "serve",
                  shard_collective: str = "psum", kv_quant=None,
-                 kv_pool_bytes: int | None = None):
+                 kv_pool_bytes: int | None = None,
+                 max_queue: int | None = None,
+                 deadline_s: float | None = None,
+                 ttft_deadline_s: float | None = None,
+                 step_retries: int = 2, retry_backoff_s: float = 0.02,
+                 watchdog: "Watchdog | bool | None" = None,
+                 nan_replan_after: int = 2):
         from repro import kvq
 
         self.mesh = mesh
@@ -156,11 +199,12 @@ class Engine:
             else:
                 num_blocks = max_slots * self.max_blocks_per_seq + 1
         self.pool = BlockPool(num_blocks, block_size)
+        self._cache_dtype = cache_dtype
         self.kv = SV.init_paged_cache(cfg, num_blocks, block_size,
                                       cache_dtype, mesh=mesh,
                                       rules=mesh_rules)
         self.scheduler = Scheduler(self.pool, max_slots=max_slots,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk, clock=clock)
         self.max_slots = max_slots
         self.prefill_chunk = prefill_chunk
         self.on_token = on_token
@@ -169,22 +213,50 @@ class Engine:
         self._sample_seed = sample_seed
         self._rngs: dict[int, np.random.Generator] = {}
         self.finished: list[Sequence] = []
+        self.rejected: list[Sequence] = []  # shed / cancelled / ...
         self.num_prefill_steps = 0
         self.num_decode_steps = 0
         # peak concurrently-admitted sequences observed before the first
         # preemption — the capacity headline BENCH_serve.json reports
         self.max_resident_seqs = 0
+        # ---- resilience knobs / state
+        self.max_queue = max_queue
+        self.default_deadline_s = deadline_s
+        self.default_ttft_deadline_s = ttft_deadline_s
+        self.step_retries = step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.nan_replan_after = nan_replan_after
+        self.num_shed = 0
+        self.num_step_retries = 0
+        self.num_nan_events = 0
+        self.num_replans = 0
+        self.num_kv_rebuilds = 0
+        # any deadline anywhere flips this; the per-step scan is skipped
+        # entirely otherwise (zero overhead for deadline-free serving)
+        self._deadline_watch = bool(deadline_s or ttft_deadline_s)
+        self._hang_flag = threading.Event()
+        if watchdog is True:
+            # serving steps are ms-scale: mean*hang_factor would be
+            # microseconds, so the floor carries the timeout
+            watchdog = Watchdog(min_steps=3, min_timeout_s=0.5)
+        self._watchdog = watchdog or None
+        if self._watchdog is not None and self._watchdog.on_hang is None:
+            self._watchdog.on_hang = self._hang_flag.set
         self._export_kv_gauges(num_blocks, cache_dtype)
 
         def raw_step(params, pool, tokens, positions, wslots, vslots,
                      last_idx):
             logits, pool = SV.paged_step(params, cfg, tokens, pool,
                                          positions, wslots, vslots, last_idx)
-            return jnp.argmax(logits, -1).astype(jnp.int32), logits, pool
+            # per-row finite flag, computed on device: the NaN/Inf guard
+            # reads B bools per step instead of shipping logits to host
+            ok = jnp.all(jnp.isfinite(logits), axis=-1)
+            return jnp.argmax(logits, -1).astype(jnp.int32), logits, ok, pool
 
         # the one shared step: compiled once per phase shape (prefill
         # (1, C), decode (max_slots, 1)); the pool buffer is donated so
         # the KV cache is updated in place across iterations
+        self._raw_step = raw_step
         self._step_fn = jax.jit(raw_step, donate_argnums=(1,))
 
         # execution planning: resolve every linear's ExecPlan once, at
@@ -287,6 +359,153 @@ class Engine:
             return self._step_fn(params, pool,
                                  *self._put_inputs(*host_arrays))
 
+    def _run_step(self, *host_arrays):
+        """The guarded jitted-step call: watchdog timing, fault
+        injection, and bounded retry-with-backoff.
+
+        Injected failures (``step_fail``) raise *before* the jitted call
+        touches the donated pool, so a retry re-runs from the identical
+        paged-KV state and recovered output is token-identical.  An
+        organic failure that consumed the donated pool buffer cannot be
+        retried in place: the engine rebuilds the pool, preempts every
+        running sequence (token-exact re-prefill), and returns None so
+        the caller abandons this iteration."""
+        attempt = 0
+        while True:
+            wd = self._watchdog
+            try:
+                if wd is not None:
+                    wd.step_started()
+                try:
+                    ev = faults.fire("hang")
+                    if ev is not None:
+                        # a jitted call can't be truly wedged from
+                        # Python; stalling past the *armed* hang timer
+                        # models it and drives the same escalation
+                        floor = 0.0
+                        if wd is not None and wd._timer is not None:
+                            floor = wd._timer.interval * 1.2
+                        time.sleep(max(ev.magnitude, floor))
+                    ev = faults.fire("step_fail")
+                    if ev is not None:
+                        raise faults.InjectedFault("step_fail", ev)
+                    return self._call_step(self.params, self.kv,
+                                           *host_arrays)
+                finally:
+                    if wd is not None:
+                        wd.step_finished()
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                attempt += 1
+                self.num_step_retries += 1
+                obs.registry().counter(
+                    "serving_step_retries_total",
+                    help="engine step failures retried").inc()
+                if not self._kv_alive():
+                    self._rebuild_kv()
+                    return None
+                if attempt > self.step_retries:
+                    raise
+                time.sleep(self.retry_backoff_s * 2 ** (attempt - 1))
+
+    def _kv_alive(self) -> bool:
+        for leaf in jax.tree.leaves(self.kv):
+            deleted = getattr(leaf, "is_deleted", None)
+            if deleted is not None and deleted():
+                return False
+        return True
+
+    def _rebuild_kv(self) -> None:
+        """The jitted step donates the pool buffer; a failure inside the
+        call can leave it deleted.  Preempt everything (re-prefill from
+        prompt ⊕ generated is token-exact) and re-init the pool so the
+        engine keeps serving instead of crashing."""
+        self.num_kv_rebuilds += 1
+        obs.registry().counter(
+            "serving_kv_rebuilds_total",
+            help="paged pools re-initialized after a step failure "
+                 "consumed the donated buffer").inc()
+        for seq in sorted(self.scheduler.running,
+                          key=lambda s: -s.admit_seqno):
+            self.scheduler.preempt(seq)
+        self.kv = SV.init_paged_cache(self.cfg, self.pool.num_blocks,
+                                      self.block_size, self._cache_dtype,
+                                      mesh=self.mesh, rules=self.mesh_rules)
+
+    # -------------------------------------------------- degradation
+    def _escalate_hang(self) -> None:
+        """Watchdog hang escalation, run right after the stalled step
+        finally returned: count it, quarantine the suspect backend, and
+        replan the step on the remaining ladder.  The engine keeps
+        serving throughout — nothing here raises."""
+        self._hang_flag.clear()
+        obs.registry().counter(
+            "serving_hang_escalations_total",
+            help="watchdog hangs escalated to a backend replan").inc()
+        self._replan("hang")
+
+    def _replan(self, reason: str) -> None:
+        """Quarantine the backends the current exec plans run on (one
+        rung of the pallas -> jnp -> dense-fallback ladder) and re-jit
+        the step so the next trace plans on what remains."""
+        self.num_replans += 1
+        obs.registry().counter(
+            "serving_replans_total",
+            help="step replans after hang/NaN escalation",
+            reason=reason).inc()
+        if not self.exec_plans:
+            # plans were never resolved at build (no backend/autotune/
+            # mesh): resolve now so the suspects are known by name
+            with contextlib.suppress(Exception):
+                self.exec_plans = self._resolve_plans(self._raw_step)
+        safe = {"dense", "dense_fallback"}
+        suspects = sorted({p.backend for p in self.exec_plans.values()}
+                          - safe)
+        for name in suspects:
+            with contextlib.suppress(ValueError):
+                dispatch.quarantine_backend(name, reason)
+        if self._policy is not None and self._policy.backend in suspects:
+            self._policy = dataclasses.replace(self._policy, backend=None)
+        # drop the compiled executables; the next call per phase shape
+        # re-traces, and plan() now selects on the post-quarantine ladder
+        self._step_fn = jax.jit(self._raw_step, donate_argnums=(1,))
+        with contextlib.suppress(Exception):
+            self.exec_plans = self._resolve_plans(self._raw_step)
+        obs.tracer().instant("engine.replan", cat="serving",
+                             reason=reason, quarantined=",".join(suspects))
+
+    def _check_finite(self, rows, ok, done: list) -> set:
+        """NaN/Inf logit guard.  ``rows``: [(seq, row_index)] consuming
+        a token this step; ``ok``: the device-computed per-row finite
+        flags.  Non-finite rows (organic or injected) are quarantined —
+        the sequence is cancelled cleanly instead of poisoning the
+        batch — and once ``nan_replan_after`` events accumulate the
+        suspect backend is quarantined too.  Returns the ids of
+        quarantined sequences."""
+        if not rows:
+            return set()
+        ok_host = np.asarray(ok)
+        bad = {i for (_, i) in rows if not bool(ok_host[i])}
+        ev = faults.fire("nan_logits")
+        if ev is not None:
+            bad.add(rows[int(ev.rng.integers(len(rows)))][1])
+        if not bad:
+            return set()
+        out = set()
+        for seq, i in rows:
+            if i not in bad:
+                continue
+            self.num_nan_events += 1
+            obs.registry().counter(
+                "serving_nan_quarantined_total",
+                help="sequences quarantined on non-finite logits").inc()
+            done.append(self.cancel(seq, "quarantined"))
+            out.add(id(seq))
+        if self.num_nan_events >= self.nan_replan_after:
+            self._replan("nan_logits")
+        return out
+
     # ------------------------------------------------------------- clock
     @property
     def now(self) -> float:
@@ -297,7 +516,12 @@ class Engine:
                ) -> Sequence:
         """Queue a request.  ``arrival`` backdates ``t_arrival`` (engine
         seconds) so latency metrics include queueing delay the engine was
-        too busy to observe; default: now."""
+        too busy to observe; default: now.
+
+        Malformed requests (over the model/pool budget) still raise;
+        *load* problems do not — a full queue or a hopeless deadline
+        sheds the request cleanly instead (returned Sequence has status
+        'shed' and never enters the scheduler)."""
         total = len(req.prompt) + req.max_new_tokens
         if total > self.max_model_len:
             raise ValueError(
@@ -307,8 +531,29 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: needs {self.pool.blocks_for(total)} "
                 f"blocks, pool holds {self.pool.capacity}")
+        if (req.deadline_s is None and req.ttft_deadline_s is None and
+                (self.default_deadline_s or self.default_ttft_deadline_s)):
+            req = dataclasses.replace(
+                req, deadline_s=self.default_deadline_s,
+                ttft_deadline_s=self.default_ttft_deadline_s)
         seq = Sequence(req=req,
                        t_arrival=self.now if arrival is None else arrival)
+        if req.deadline_s is not None or req.ttft_deadline_s is not None:
+            self._deadline_watch = True
+        shed_reason = None
+        if self.max_queue is not None and \
+                len(self.scheduler.waiting) >= self.max_queue:
+            shed_reason = "queue_full"
+        elif req.deadline_s is not None:
+            # deadline-aware admission: if the p95 queue wait already
+            # exceeds the whole budget, queueing it is a promise the
+            # engine knows it can't keep
+            p95 = obs.registry().histogram(
+                "serving_queue_wait_s").percentile(95)
+            if p95 is not None and p95 > req.deadline_s:
+                shed_reason = "deadline_hopeless"
+        if shed_reason is not None:
+            return self._shed(seq, shed_reason)
         self.scheduler.add(seq)
         obs.registry().counter("serving_requests_submitted_total",
                                help="requests queued").inc()
@@ -316,24 +561,92 @@ class Engine:
                              rid=req.rid, prompt_tokens=len(req.prompt))
         return seq
 
+    def _shed(self, seq: Sequence, reason: str) -> Sequence:
+        seq.status = "shed"
+        seq.phase = Phase.FINISHED
+        seq.t_finish = self.now
+        self.num_shed += 1
+        self.rejected.append(seq)
+        obs.registry().counter(
+            "serving_shed_total",
+            help="requests rejected at admission (load shedding)",
+            reason=reason).inc()
+        obs.tracer().instant("request.shed", cat="serving",
+                             rid=seq.req.rid, reason=reason)
+        return seq
+
+    def cancel(self, seq: Sequence, reason: str = "cancelled") -> Sequence:
+        """Cleanly terminate a queued or running sequence: scheduler
+        resources freed, status recorded, counted — never an exception.
+        Idempotent on already-terminal sequences."""
+        if seq.phase is Phase.FINISHED:
+            return seq
+        self.scheduler.remove(seq)
+        seq.status = reason
+        seq.t_finish = self.now
+        self.rejected.append(seq)
+        obs.registry().counter(
+            "serving_cancelled_total",
+            help="live sequences cancelled (deadline/disconnect/guard)",
+            reason=reason).inc()
+        obs.tracer().instant("request.cancel", cat="serving",
+                             rid=seq.req.rid, reason=reason,
+                             generated=len(seq.generated))
+        return seq
+
+    def _enforce_deadlines(self, done: list) -> None:
+        now = self.now
+        for seq in list(self.scheduler.waiting) + list(self.scheduler.running):
+            req = seq.req
+            if req.deadline_s is not None and \
+                    now - seq.t_arrival > req.deadline_s:
+                done.append(self.cancel(seq, "deadline"))
+            elif req.ttft_deadline_s is not None and \
+                    seq.t_first_token is None and \
+                    now - seq.t_arrival > req.ttft_deadline_s:
+                done.append(self.cancel(seq, "deadline"))
+
     # -------------------------------------------------------------- step
     def step(self) -> list[Sequence]:
         """One engine iteration (one prefill chunk OR one decode batch).
-        Returns sequences that finished this iteration."""
+        Returns sequences that *terminated* this iteration — finished
+        normally (status 'ok') or cancelled (deadline / disconnect /
+        quarantine; see ``Sequence.status``)."""
         done: list[Sequence] = []
+        injecting = faults.active() is not None
+        if injecting:
+            ev = faults.fire("latency")
+            if ev is not None:
+                time.sleep(ev.magnitude)  # step-latency spike
+            self._maybe_disconnect(done)
+        if self._deadline_watch:
+            self._enforce_deadlines(done)
         act = self.scheduler.schedule()
         self._sample_depths()
         if act is None:
-            if self.scheduler.waiting:
+            if self.scheduler.waiting and not injecting:
                 raise RuntimeError(
                     "engine stalled: waiting requests but nothing running "
                     "and the head cannot be admitted")
+            # under injection a transient (injected OOM) admission miss
+            # is expected — report idle and let the caller re-step
             return done
         if act[0] == "prefill":
             self._prefill_chunk(act[1], act[2], act[3], done)
         else:
             self._decode_batch(act[1], done)
+        if self._hang_flag.is_set():
+            self._escalate_hang()
         return done
+
+    def _maybe_disconnect(self, done: list) -> None:
+        live = [s for s in self.scheduler.running if not s.done]
+        if not live:
+            return
+        ev = faults.fire("disconnect")
+        if ev is not None:
+            victim = live[int(ev.rng.integers(len(live)))]
+            done.append(self.cancel(victim, "disconnected"))
 
     def _sample_depths(self) -> None:
         """Per-iteration queue/occupancy samples (gauge = live view for
@@ -368,13 +681,17 @@ class Engine:
         with obs.tracer().span("engine.prefill_chunk", cat="serving",
                                rid=seq.req.rid, start=start, end=end), \
                 self._step_timer("prefill"):
-            tok, logits, self.kv = self._call_step(
-                self.params, self.kv, tokens, positions, ws, vs, last)
+            out = self._run_step(tokens, positions, ws, vs, last)
+            if out is None:  # pool rebuilt; seq was preempted, re-prefills
+                return
+            tok, logits, ok, self.kv = out
             if obs.tracer().enabled:  # sync so the span covers compute,
                 jax.block_until_ready(tok)  # never on the untraced path
         self.num_prefill_steps += 1
         seq.prefill_pos = end
         if end == len(toks):  # prompt fully ingested -> first new token
+            if self._check_finite([(seq, 0)], ok, done):
+                return
             seq.phase = Phase.DECODE
             self._append(seq, self._pick(seq, tok[0], logits[0]), done)
 
@@ -407,8 +724,10 @@ class Engine:
         with obs.tracer().span("engine.decode_step", cat="serving",
                                batch=len(active)), \
                 self._step_timer("decode"):
-            tok, logits, self.kv = self._call_step(
-                self.params, self.kv, tokens, positions, ws, vs, last)
+            out = self._run_step(tokens, positions, ws, vs, last)
+            if out is None:  # pool rebuilt; everyone re-prefills
+                return
+            tok, logits, ok, self.kv = out
             if obs.tracer().enabled:
                 jax.block_until_ready(tok)
         self.num_decode_steps += 1
@@ -416,7 +735,11 @@ class Engine:
             "serving_decode_batch_occupancy",
             help="live rows per decode iteration (of max_slots)",
             buckets=DEPTH_BUCKETS).observe(len(active))
+        # only live rows are guarded — idle slots attend scratch garbage
+        bad = self._check_finite([(s, s.slot) for s in active], ok, done)
         for seq in active:
+            if id(seq) in bad:
+                continue
             self._append(seq, self._pick(seq, tok[seq.slot],
                                          logits[seq.slot]), done)
 
@@ -482,12 +805,16 @@ class Engine:
             # a request queues from its *scheduled* arrival even if the
             # engine was mid-step then (min: pulled-forward arrivals are
             # stamped at actual submission, never in the future)
-            self.submit(req, arrival=min(req.arrival_time, self.now))
+            seq = self.submit(req, arrival=min(req.arrival_time, self.now))
+            if seq.status != "ok":  # shed at admission: terminal already
+                results[req.rid] = seq
 
         while pending or self.scheduler.has_work():
             while pending and pending[0].arrival_time <= self.now:
                 _take()
             if not self.scheduler.has_work():
+                if not pending:
+                    break  # everything left was shed at submission
                 if wait_for_arrivals:
                     time.sleep(max(0.0, pending[0].arrival_time - self.now))
                 _take()
@@ -501,12 +828,19 @@ class Engine:
         inter-token, step-time, queue-depth histograms) — e.g. after a
         warmup stream — without touching queued/running work."""
         self.finished = []
+        self.rejected = []
         self.num_prefill_steps = 0
         self.num_decode_steps = 0
         self.max_resident_seqs = 0
+        self.num_shed = 0
+        self.num_step_retries = 0
+        self.num_nan_events = 0
+        self.num_replans = 0
+        self.num_kv_rebuilds = 0
         self.scheduler.num_preemptions = 0
         self.scheduler.num_admitted = 0
         self.scheduler.num_evicted_blocks = 0
+        self.scheduler.num_thrash = 0
         obs.registry().reset(prefix="serving_")
         for seq in self.scheduler.running:
             seq.t_last_token = None  # warmup gaps must not leak into the
@@ -515,15 +849,19 @@ class Engine:
     # ----------------------------------------------------------- metrics
     def metrics(self) -> dict:
         """Aggregate serving metrics over finished requests.  Every key
-        is always present: with 0 finished requests rates/percentiles
-        are 0.0, with 1 the percentiles are that request's value —
+        is always present and the call never raises — with 0 finished
+        requests (including mid-flight: everything submitted but nothing
+        done) counts and rates are 0 / 0.0 and percentiles are ``None``
+        ("not measured", distinguishable from a true 0.0 latency); with
+        1 finished request the percentiles are that request's value —
         never NaN, never a missing key (callers index
-        ``m["tok_per_s"]`` unconditionally)."""
+        ``m["tok_per_s"]`` unconditionally; display code should
+        coalesce percentiles with ``or 0.0``)."""
         fin = self.finished
 
         def pct(xs, q):
             if len(xs) == 0:
-                return 0.0
+                return None
             if len(xs) == 1:
                 return float(xs[0])
             return float(np.percentile(np.asarray(xs), q))
@@ -534,7 +872,8 @@ class Engine:
         lat = [s.t_finish - s.t_arrival for s in fin]
         ttft = [s.t_first_token - s.t_arrival for s in fin
                 if s.t_first_token is not None]
-        inter = obs.registry().histogram("serving_intertoken_s")
+        reg = obs.registry()
+        inter = reg.histogram("serving_intertoken_s")
         return {
             "requests": len(fin),
             "generated_tokens": gen,
@@ -549,10 +888,19 @@ class Engine:
             "latency_p95_s": pct(lat, 95),
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
-            # percentile() is None on an empty reservoir; this summary
-            # promises plain 0.0 for "nothing measured yet"
-            "intertoken_p50_s": inter.percentile(50) or 0.0,
-            "intertoken_p95_s": inter.percentile(95) or 0.0,
+            # None on an empty reservoir, same contract as pct()
+            "intertoken_p50_s": inter.percentile(50),
+            "intertoken_p95_s": inter.percentile(95),
+            # ---- resilience
+            "shed": self.num_shed,
+            "cancelled": len(self.rejected) - self.num_shed,
+            "step_retries": self.num_step_retries,
+            "nan_quarantined": self.num_nan_events,
+            "replans": self.num_replans,
+            "kv_rebuilds": self.num_kv_rebuilds,
+            "preempt_thrash": self.scheduler.num_thrash,
+            "queue_wait_p95_s": reg.histogram(
+                "serving_queue_wait_s").percentile(95),
         }
 
     def summary(self) -> dict:

@@ -51,6 +51,10 @@ class BlockPool:
         """All-or-nothing allocation of ``n`` blocks (None on exhaustion)."""
         if n > len(self._free):
             return None
+        from repro import faults
+        if faults.fire("oom") is not None:
+            return None  # injected exhaustion: same signal real pressure
+            # gives the scheduler (admission stalls / preemption path)
         out = [self._free.popleft() for _ in range(n)]
         self._free_set.difference_update(out)
         return out

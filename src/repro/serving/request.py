@@ -30,12 +30,21 @@ class Request:
     temperature: float = 0.0  # 0 -> greedy (token-identical to the
     # static generate path); > 0 -> host-side categorical sampling
     arrival_time: float = 0.0  # seconds after engine start (simulation)
+    # SLO deadlines, both relative to arrival (None = no deadline).
+    # Exceeding one cancels the request cleanly (status 'deadline') —
+    # it never silently queues forever.
+    deadline_s: float | None = None       # total latency budget
+    ttft_deadline_s: float | None = None  # first-token budget
 
     def __post_init__(self):
         if len(self.prompt) == 0:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+        for name in ("deadline_s", "ttft_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"request {self.rid}: {name} must be > 0")
 
 
 @dataclass
@@ -54,6 +63,16 @@ class Sequence:
     # inter-token gap source; reset on preemption (the re-prefill gap is
     # queueing, not decode cadence)
     t_finish: float | None = None
+    t_enqueue: float = 0.0    # last time it (re-)entered the waiting
+    # queue; admit-time queue-wait metrics read it
+    readmit_after_tick: int = 0  # preemption-thrash backoff: the
+    # scheduler skips admitting this sequence until its tick passes
+    # status: 'ok' while live/completed; a terminal failure mode
+    # otherwise ('shed' rejected at admission, 'deadline' cancelled on
+    # an expired SLO, 'disconnected' client went away, 'quarantined'
+    # non-finite logits twice).  Only 'ok' FINISHED sequences carry a
+    # full generation.
+    status: str = "ok"
 
     @property
     def prefill_tokens(self) -> list[int]:
@@ -73,7 +92,8 @@ class Sequence:
         out = {"rid": self.req.rid,
                "prompt_tokens": len(self.req.prompt),
                "new_tokens": len(self.generated),
-               "preemptions": self.preemptions}
+               "preemptions": self.preemptions,
+               "status": self.status}
         if self.t_first_token is not None:
             out["ttft_s"] = self.t_first_token - self.t_arrival
         if self.t_finish is not None:

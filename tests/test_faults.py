@@ -1,0 +1,464 @@
+"""Fault-injection subsystem + fault-tolerant serving tests.
+
+Covers the resilience contract end to end: deterministic seeded
+schedules (repro.faults), zero overhead / token identity when disarmed,
+per-class engine recovery (retry, preemption, NaN quarantine + backend
+replan, deadline cancellation, load shedding), the scheduler's
+preemption-thrash guard, and artifact corruption -> quarantine + rebuild
+(plan cache, calibration, checkpoints)."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import dispatch, faults, obs
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.runtime import serve as SV
+from repro.serving import BlockPool, Engine, Request, Scheduler
+from repro.serving.request import Sequence
+from repro.serving.scheduler import THRASH_AFTER
+
+CFG = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=211, max_seq_len=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    """Every test starts and ends disarmed with no quarantined backends
+    and fresh serving_* series (the registry is process-global)."""
+    faults.disarm()
+    dispatch.clear_quarantine()
+    obs.registry().reset(prefix="serving_")
+    yield
+    faults.disarm()
+    dispatch.clear_quarantine()
+
+
+def _prompts(lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [tuple(int(t) for t in rng.integers(0, CFG.vocab_size, size=L))
+            for L in lens]
+
+
+PROMPTS = _prompts((5, 11, 3, 8))
+
+
+def _reqs(new=6, **kw):
+    return [Request(rid=i, prompt=p, max_new_tokens=new, **kw)
+            for i, p in enumerate(PROMPTS)]
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("max_model_len", 64)
+    return Engine(params, CFG, **kw)
+
+
+@pytest.fixture(scope="module")
+def ref_tokens(params):
+    out = {}
+    for i, p in enumerate(PROMPTS):
+        toks = np.array([p], np.int32)
+        r = SV.generate(params, CFG, {"tokens": toks}, max_new_tokens=6)
+        out[i] = [int(t) for t in np.asarray(r)[0]]
+    return out
+
+
+# ------------------------------------------------------------ fault plan
+def test_plan_determinism_and_budget():
+    a = faults.FaultPlan("step_fail:p=0.5,max=0", seed=7)
+    b = faults.FaultPlan("step_fail:p=0.5,max=0", seed=7)
+    sa = [a.fire("step_fail") is not None for _ in range(200)]
+    sb = [b.fire("step_fail") is not None for _ in range(200)]
+    assert sa == sb and 40 < sum(sa) < 160  # same stream, ~p=0.5
+    c = faults.FaultPlan("step_fail:p=0.5,max=0", seed=8)
+    sc = [c.fire("step_fail") is not None for _ in range(200)]
+    assert sa != sc  # seed changes the stream
+
+    capped = faults.FaultPlan("oom:p=1.0,after=3,max=2")
+    fires = [capped.fire("oom") for _ in range(10)]
+    assert [f is not None for f in fires] == [False] * 3 + [True] * 2 \
+        + [False] * 5
+    assert capped.fires("oom") == 2 and capped.exhausted()
+
+
+def test_always_draw_keeps_stream_budget_independent():
+    """The decision at opportunity n depends only on (seed, class, n) —
+    exhausting the budget earlier must not shift later draws."""
+    wide = faults.FaultPlan("oom:p=0.5,max=0", seed=3)
+    narrow = faults.FaultPlan("oom:p=0.5,max=1", seed=3)
+    w = [wide.fire("oom") is not None for _ in range(50)]
+    n = [narrow.fire("oom") is not None for _ in range(50)]
+    first = w.index(True)
+    assert n[:first + 1] == w[:first + 1] and not any(n[first + 1:])
+
+
+def test_parse_spec_grammar_and_validation():
+    specs = faults.parse_spec("all")
+    assert {s.cls for s in specs} == set(faults.CLASSES)
+    [s] = faults.parse_spec("hang:p=0.25,after=2,max=3,mag=1.5")
+    assert (s.p, s.after, s.max_fires, s.magnitude) == (0.25, 2, 3, 1.5)
+    two = faults.parse_spec("oom;disconnect:max=2")
+    assert [s.cls for s in two] == ["oom", "disconnect"]
+    with pytest.raises(ValueError):
+        faults.parse_spec("not_a_class")
+    with pytest.raises(ValueError):
+        faults.parse_spec("oom:bogus=1")
+    with pytest.raises(ValueError):
+        faults.FaultPlan("oom;oom")
+
+
+def test_arm_disarm_gauge_and_env(monkeypatch):
+    g = obs.registry().gauge("faults_armed")
+    assert faults.active() is None and g.value == 0
+    faults.arm("oom;hang")
+    assert g.value == 2 and faults.active() is not None
+    faults.disarm()
+    assert g.value == 0 and faults.fire("oom") is None
+
+    monkeypatch.setenv("REPRO_FAULTS", "latency:max=1")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "5")
+    plan = faults.plan_from_env()
+    assert plan is not None and plan.seed == 5
+    assert plan.armed_classes() == ("latency",)
+    faults.disarm()
+    monkeypatch.setenv("REPRO_FAULTS", "")
+    assert faults.plan_from_env() is None
+
+
+# ------------------------------------------ disarmed = identical serving
+def test_disarmed_engine_token_identical_and_armed_gauge_zero(
+        params, ref_tokens):
+    eng = _engine(params)
+    assert obs.registry().gauge("faults_armed").value == 0
+    res = eng.run(_reqs())
+    for i in ref_tokens:
+        assert res[i].status == "ok"
+        assert res[i].generated == ref_tokens[i], f"req {i}"
+    m = eng.metrics()
+    assert m["shed"] == m["step_retries"] == m["replans"] == 0
+
+
+# --------------------------------------------------- per-class recovery
+@pytest.mark.parametrize("spec", [
+    "latency:p=1.0,after=1,max=2,mag=0.01",
+    "oom:p=0.5,after=1,max=4",
+    "step_fail:p=1.0,after=2,max=2",
+])
+def test_transient_faults_recover_token_identically(
+        params, ref_tokens, spec):
+    faults.arm(spec)
+    eng = _engine(params)
+    res = eng.run(_reqs())
+    faults.disarm()
+    for i in ref_tokens:
+        assert res[i].status == "ok"
+        assert res[i].generated == ref_tokens[i], f"req {i} under {spec}"
+    if spec.startswith("step_fail"):
+        assert eng.num_step_retries == 2
+
+
+def test_step_fail_exhausted_retries_reraise(params):
+    """An unbounded failure storm beyond the retry budget must surface,
+    not loop forever."""
+    faults.arm("step_fail:p=1.0,after=0,max=0")
+    eng = _engine(params, step_retries=2, retry_backoff_s=0.001)
+    with pytest.raises(faults.InjectedFault):
+        eng.run(_reqs(new=2))
+
+
+def test_nan_guard_quarantines_sequence_then_backend(params, ref_tokens):
+    faults.arm("nan_logits:p=1.0,after=3,max=2")
+    eng = _engine(params)
+    res = eng.run(_reqs())
+    faults.disarm()
+    statuses = {i: res[i].status for i in res}
+    assert sum(1 for s in statuses.values() if s == "quarantined") == 2
+    assert eng.num_nan_events == 2
+    # second event crosses nan_replan_after=2 -> backend replan
+    assert eng.num_replans >= 1
+    for i in res:
+        if res[i].status == "ok":
+            assert res[i].generated == ref_tokens[i]
+
+
+def test_disconnect_cancels_victim_cleanly(params, ref_tokens):
+    faults.arm("disconnect:p=1.0,after=2,max=1")
+    eng = _engine(params)
+    res = eng.run(_reqs())
+    faults.disarm()
+    statuses = [res[i].status for i in res]
+    assert statuses.count("disconnected") == 1
+    for i in res:
+        if res[i].status == "ok":
+            assert res[i].generated == ref_tokens[i]
+
+
+def test_hang_escalates_and_serving_continues(params):
+    from repro.distributed.watchdog import Watchdog
+
+    wd = Watchdog(min_steps=2, min_timeout_s=0.05)
+    eng = _engine(params, watchdog=wd)
+    eng.run(_reqs(new=2))  # warm compiles so the hang timer is tight
+    eng.reset_metrics()
+    faults.arm("hang:p=1.0,after=4,max=1,mag=0.1")
+    res = eng.run(_reqs())
+    faults.disarm()
+    assert wd.hang_count >= 1
+    assert eng.num_replans >= 1
+    assert all(res[i].status == "ok" for i in res)
+    assert all(res[i].done for i in res)
+
+
+def test_injected_oom_is_indistinguishable_from_pressure(params):
+    pool = BlockPool(8, 4)
+    faults.arm("oom:p=1.0,after=0,max=1")
+    assert pool.alloc(2) is None      # injected exhaustion
+    got = pool.alloc(2)               # budget spent: real allocation
+    faults.disarm()
+    assert got is not None and pool.free_blocks == 5
+
+
+# ------------------------------------------------- deadlines / shedding
+def test_deadline_cancels_cleanly(params):
+    eng = _engine(params, deadline_s=1e-6)
+    res = eng.run(_reqs())
+    assert all(res[i].status == "deadline" for i in res)
+    m = eng.metrics()
+    assert m["cancelled"] == 4 and m["shed"] == 0
+
+
+def test_ttft_deadline_per_request(params):
+    eng = _engine(params)
+    res = eng.run([Request(rid=0, prompt=PROMPTS[0], max_new_tokens=6,
+                           ttft_deadline_s=1e-7)])
+    assert res[0].status == "deadline"
+
+
+def test_queue_full_sheds(params):
+    eng = _engine(params, max_slots=1, max_queue=1)
+    res = eng.run(_reqs())
+    statuses = [res[i].status for i in res]
+    assert statuses.count("shed") >= 1
+    for i in res:
+        if res[i].status == "ok":
+            assert len(res[i].generated) == 6
+    assert eng.metrics()["shed"] == statuses.count("shed")
+
+
+def test_deadline_hopeless_sheds_at_submit(params):
+    obs.registry().histogram("serving_queue_wait_s").observe(5.0)
+    eng = _engine(params)
+    seq = eng.submit(Request(rid=0, prompt=PROMPTS[0], max_new_tokens=4,
+                             deadline_s=0.001))
+    assert seq.status == "shed"
+    assert eng.rejected == [seq] and not eng.scheduler.has_work()
+
+
+def test_request_deadline_validation():
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=(1,), max_new_tokens=1, deadline_s=0.0)
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=(1,), max_new_tokens=1,
+                ttft_deadline_s=-1.0)
+
+
+# ----------------------------------------------- satellite 3: metrics()
+def test_metrics_never_raises_zero_submitted(params):
+    eng = _engine(params)
+    m = eng.metrics()
+    assert m["requests"] == 0 and m["tok_per_s"] == 0.0
+    assert m["latency_p50_s"] is None and m["ttft_p95_s"] is None
+    assert m["intertoken_p95_s"] is None
+    assert m["queue_wait_p95_s"] is None
+    assert eng.summary() == m
+
+
+def test_metrics_never_raises_mid_flight(params):
+    eng = _engine(params)
+    eng.submit(Request(rid=0, prompt=PROMPTS[0], max_new_tokens=6))
+    eng.step()  # prefill under way, nothing finished
+    m = eng.metrics()
+    assert m["requests"] == 0
+    assert m["latency_p50_s"] is None and m["latency_p95_s"] is None
+
+
+# ---------------------------------------- satellite 1: thrash guard
+def test_preemption_thrash_guard_backs_off():
+    pool = BlockPool(60, 4)
+    sched = Scheduler(pool, max_slots=2, prefill_chunk=4)
+    hog = Sequence(req=Request(rid=0, prompt=(1,) * 8, max_new_tokens=4))
+    victim = Sequence(req=Request(rid=1, prompt=(1,) * 8,
+                                  max_new_tokens=4))
+    sched.add(hog)
+    sched.add(victim)
+    sched.schedule()
+    assert victim in sched.running
+    victim.preemptions = THRASH_AFTER - 1  # next preempt trips the guard
+    sched.preempt(victim)
+    assert sched.num_thrash == 1
+    assert victim.readmit_after_tick > sched.tick
+    assert obs.registry().value(
+        "counter", "scheduler_preempt_thrash_total") == 1
+    # while backed off, the head is NOT admitted (hog still running)...
+    sched.schedule()
+    assert victim not in sched.running and sched.waiting[0] is victim
+    # ...but FCFS order is preserved, and once the backoff expires (or
+    # nothing is running) it re-admits
+    for _ in range(victim.readmit_after_tick - sched.tick):
+        sched.schedule()
+    assert victim in sched.running
+
+
+def test_thrash_backoff_ignored_when_nothing_running():
+    pool = BlockPool(60, 4)
+    sched = Scheduler(pool, max_slots=1, prefill_chunk=4)
+    seq = Sequence(req=Request(rid=0, prompt=(1,) * 8, max_new_tokens=4))
+    seq.preemptions = THRASH_AFTER + 2
+    sched.add(seq)
+    seq.readmit_after_tick = sched.tick + 1000
+    sched.schedule()  # would deadlock if the backoff were honored
+    assert seq in sched.running
+
+
+# ------------------------------------- backend quarantine / degradation
+def test_backend_quarantine_ladder():
+    names = dispatch.backend_names()
+    assert "dense_fallback" in names
+    dispatch.quarantine_backend("msgemm_jnp", "test")
+    assert dispatch.is_quarantined("msgemm_jnp")
+    assert "msgemm_jnp" in dispatch.quarantined()
+    from repro.core.spec import QuantSpec
+    spec = QuantSpec(mode="msgemm", d=3, scale_block=36)
+    be = dispatch.registry.select_backend(spec, 3)
+    assert be.name != "msgemm_jnp"
+    dispatch.clear_quarantine("msgemm_jnp")
+    assert not dispatch.quarantined()
+    with pytest.raises(ValueError):
+        dispatch.quarantine_backend("no_such_backend", "test")
+
+
+def test_quarantine_never_empties_candidates():
+    from repro.core.spec import QuantSpec
+    spec = QuantSpec(mode="msgemm", d=3, scale_block=36)
+    for name in dispatch.backend_names():
+        try:
+            dispatch.quarantine_backend(name, "test")
+        except ValueError:
+            pass
+    be = dispatch.registry.select_backend(spec, 3)  # falls back unfiltered
+    assert be is not None
+
+
+def test_dense_fallback_matches_msgemm_numerics():
+    from repro.core import linear as qlinear
+    from repro.core.spec import QuantSpec
+
+    rng = np.random.default_rng(0)
+    spec = QuantSpec(mode="msgemm", d=3, scale_block=36)
+    w = jax.numpy.asarray(rng.standard_normal((16, 36)), jax.numpy.float32)
+    x = jax.numpy.asarray(rng.standard_normal((5, 36)), jax.numpy.float32)
+    qp = qlinear.from_dense(w, spec)
+    ref = dispatch.execute(
+        qp, x, spec, plan_override=dispatch.ExecPlan(backend="msgemm_jnp"))
+    got = dispatch.execute(
+        qp, x, spec,
+        plan_override=dispatch.ExecPlan(backend="dense_fallback"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------- satellite 2 + artifacts: corruption
+def test_plan_cache_atomic_write_and_corrupt_rebuild(tmp_path):
+    path = tmp_path / "plans.json"
+    old = dispatch.cache().path
+    try:
+        c = dispatch.set_cache_path(path)
+        c.put("k|1", dispatch.ExecPlan(backend="msgemm_jnp"))
+        assert not list(tmp_path.glob("*.tmp*"))  # atomic: no temp left
+        doc = json.loads(path.read_text())
+        assert "crc" in doc  # CRC-stamped
+        # reload round-trips
+        assert len(dispatch.set_cache_path(path)) == 1
+
+        path.write_text('{"version": 3, "plans": {broken')
+        c = dispatch.set_cache_path(path)
+        assert len(c) == 0  # quarantined + rebuilt empty
+        assert list(tmp_path.glob("plans.json.quarantined*"))
+        c.put("k|1", dispatch.ExecPlan(backend="msgemm_jnp"))
+        assert len(dispatch.set_cache_path(path)) == 1  # rebuilt
+    finally:
+        dispatch.set_cache_path(old)
+
+
+def test_plan_cache_crc_mismatch_quarantined(tmp_path):
+    path = tmp_path / "plans.json"
+    old = dispatch.cache().path
+    try:
+        c = dispatch.set_cache_path(path)
+        c.put("k|1", dispatch.ExecPlan(backend="msgemm_jnp"))
+        doc = json.loads(path.read_text())
+        doc["crc"] = "deadbeef"  # bit-rot the stamp
+        path.write_text(json.dumps(doc))
+        assert len(dispatch.set_cache_path(path)) == 0
+        assert list(tmp_path.glob("plans.json.quarantined*"))
+    finally:
+        dispatch.set_cache_path(old)
+
+
+def test_injected_plan_cache_corruption_recovers(tmp_path):
+    path = tmp_path / "plans.json"
+    old = dispatch.cache().path
+    try:
+        faults.arm("corrupt_plan_cache")
+        dispatch.set_cache_path(path).put(
+            "k|1", dispatch.ExecPlan(backend="msgemm_jnp"))
+        faults.disarm()
+        assert len(dispatch.set_cache_path(path)) == 0  # corrupt -> empty
+        assert list(tmp_path.glob("plans.json.quarantined*"))
+    finally:
+        dispatch.set_cache_path(old)
+
+
+def test_calibration_corruption_quarantined(tmp_path):
+    from repro.obs import perfmodel as pm
+
+    path = tmp_path / "calibration.json"
+    device, interpret = pm.current_partition()
+    cal = pm.Calibration(device=device, interpret=interpret,
+                         constants={"*": {"launch_s": 1e-6, "step_s": 1e-8,
+                                          "produce_s_per_flop": 1e-9,
+                                          "consume_s_per_op": 1e-9,
+                                          "hbm_s_per_byte": 1e-10}},
+                         fit={"n_samples": 4})
+    faults.arm("corrupt_calibration")
+    cal.save(path)
+    faults.disarm()
+    assert pm.load_calibration(path) is None
+    assert list(tmp_path.glob("calibration.json.quarantined*"))
+    cal.save(path)  # rebuild
+    assert pm.load_calibration(path) is not None
+
+
+def test_checkpoint_corruption_falls_back_to_older_step(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=3)
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    mgr.save(1, tree)
+    faults.arm("corrupt_checkpoint")
+    mgr.save(2, tree)
+    faults.disarm()
+    step, restored = mgr.restore_latest(tree)
+    assert step == 1 and np.array_equal(restored["w"], tree["w"])
+    assert mgr.all_steps() == [1]  # corpse excluded from step listing

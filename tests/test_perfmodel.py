@@ -249,6 +249,7 @@ def test_samples_from_plan_cache_skips_untagged(monkeypatch, tmp_path):
     legacy_row.pop("interpret")
     legacy_row.pop("device")
     doc["timings"][key].append(legacy_row)  # a pre-tag row
+    doc.pop("crc", None)  # hand-edited: drop the stamp, legacy-style load
     path.write_text(json.dumps(doc))
     samples, untagged = pm.samples_from_plan_cache(path)
     assert untagged == 1
@@ -324,6 +325,7 @@ def test_obs_cli_calibrate_and_check_regressions(monkeypatch, tmp_path,
     doc = json.loads(open(cache_path).read())
     key = next(iter(doc["timings"]))
     doc["timings"][key][0]["s"] *= 100 * pm.DEFAULT_TOLERANCE
+    doc.pop("crc", None)  # hand-edited: drop the stamp, legacy-style load
     slow = tmp_path / "slow.json"
     slow.write_text(json.dumps(doc))
     capsys.readouterr()

@@ -1,0 +1,102 @@
+"""Unit coverage for distributed/watchdog.py: straggler z-score
+detection, hang-timer arming/firing, the min_timeout_s floor, and the
+step_finished() stats contract."""
+
+import time
+
+import pytest
+
+from repro import obs
+from repro.distributed.watchdog import Watchdog
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.registry().reset()
+    yield
+    obs.registry().reset()
+
+
+def _warm(wd, n, dt=0.0):
+    """Feed n fast synthetic steps so the rolling stats are primed."""
+    for _ in range(n):
+        wd.step_started()
+        if dt:
+            time.sleep(dt)
+        wd.step_finished()
+
+
+def test_no_arming_before_min_steps():
+    wd = Watchdog(min_steps=5, min_timeout_s=0.01)
+    for _ in range(5):
+        wd.step_started()
+        assert wd._timer is None  # not enough history yet
+        info = wd.step_finished()
+        assert info["straggler"] is False and info["step_time"] >= 0.0
+    wd.step_started()
+    assert wd._timer is not None  # history primed, timer armed
+    wd.step_finished()
+    assert wd._timer is None  # cancelled on finish
+    assert wd.hang_count == 0
+
+
+def test_hang_timer_fires_and_counts():
+    fired = []
+    wd = Watchdog(min_steps=2, min_timeout_s=0.05,
+                  on_hang=lambda: fired.append(True))
+    _warm(wd, 3)
+    wd.step_started()
+    timeout = wd._timer.interval
+    assert timeout >= 0.05  # floor respected on tiny means
+    time.sleep(timeout * 1.5)
+    wd.step_finished()
+    assert wd.hang_count >= 1
+    assert fired
+    assert obs.registry().value("counter", "watchdog_hangs_total") >= 1
+
+
+def test_min_timeout_floor():
+    wd = Watchdog(min_steps=2, min_timeout_s=5.0)
+    _warm(wd, 3)  # mean is microseconds; floor must dominate
+    wd.step_started()
+    assert wd._timer.interval == pytest.approx(5.0)
+    wd.step_finished()
+    assert wd.hang_count == 0
+
+
+def test_straggler_zscore_detection():
+    seen = []
+    wd = Watchdog(min_steps=3, z_threshold=4.0, min_timeout_s=10.0,
+                  on_straggler=lambda dt, mean, std: seen.append(dt))
+    # prime with steps of small but nonzero spread so std > 0
+    for dt in (0.001, 0.002, 0.001, 0.002, 0.001):
+        wd.step_started()
+        time.sleep(dt)
+        wd.step_finished()
+    assert wd.straggler_count == 0
+    wd.step_started()
+    time.sleep(0.08)  # >> mean + 4 std
+    info = wd.step_finished()
+    assert info["straggler"] is True
+    assert wd.straggler_count == 1
+    assert seen and seen[0] == pytest.approx(info["step_time"])
+    assert obs.registry().value(
+        "counter", "watchdog_stragglers_total") == 1
+
+
+def test_straggler_sample_joins_history():
+    wd = Watchdog(min_steps=2, min_timeout_s=10.0)
+    _warm(wd, 4)
+    before = len(wd._times)
+    wd.step_started()
+    wd.step_finished()
+    assert len(wd._times) == before + 1
+
+
+def test_window_bounds_stats():
+    wd = Watchdog(window=4, min_steps=2, min_timeout_s=10.0)
+    wd._times.extend([10.0, 10.0, 0.001, 0.001, 0.001, 0.001])
+    mean, std = wd._stats()
+    # only the last `window` samples count: the 10s outliers age out
+    assert mean == pytest.approx(0.001)
+    assert std == pytest.approx(0.0)
