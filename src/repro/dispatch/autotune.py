@@ -81,6 +81,7 @@ class PlanCache:
         self.path = Path(path) if path is not None else default_cache_path()
         self._plans: dict[str, ExecPlan] = {}
         self._timings: dict[str, list] = {}
+        self._shard_variants: dict[str, dict] = {}
         self._loaded = False
 
     # ------------------------------------------------------------- io
@@ -117,11 +118,18 @@ class PlanCache:
             t = raw.get("timings")
             if isinstance(t, dict):
                 self._timings.update(t)
+            # additive key (still version 3): measured pipelined-
+            # collective winners per one-shot base key (ISSUE 10).  v3
+            # files written before the table existed simply lack it.
+            sv = raw.get("shard_variants")
+            if isinstance(sv, dict):
+                self._shard_variants.update(sv)
         except (ValueError, TypeError, AttributeError):
             # parsed + CRC-clean but schema-invalid (e.g. hand-edited):
             # quarantine like any other corruption and start empty
             self._plans.clear()
             self._timings.clear()
+            self._shard_variants.clear()
             artifacts.quarantine(self.path, "plan_cache", reason="schema")
         return self
 
@@ -136,6 +144,10 @@ class PlanCache:
         if self._timings:
             payload["timings"] = {k: self._timings[k]
                                   for k in sorted(self._timings)}
+        if self._shard_variants:
+            payload["shard_variants"] = {
+                k: self._shard_variants[k]
+                for k in sorted(self._shard_variants)}
         artifacts.atomic_write_json(self.path, artifacts.stamp_crc(payload))
         ev = faults.fire("corrupt_plan_cache")
         if ev is not None:
@@ -163,6 +175,24 @@ class PlanCache:
         if not self._loaded:
             self.load()
         return self._timings.get(key)
+
+    # --------------------------------------------- pipelined collectives
+    def shard_variant(self, base_key: str) -> dict | None:
+        """Measured pipelined-collective winner for the one-shot plan
+        keyed by ``base_key``: {'pipeline_chunks', 'collective_impl',
+        'rows'} (rows = the per-variant timing table), or None when this
+        linear's variants were never tuned."""
+        if not self._loaded:
+            self.load()
+        return self._shard_variants.get(base_key)
+
+    def put_shard_variant(self, base_key: str, variant: dict, *,
+                          persist: bool = True) -> None:
+        if not self._loaded:
+            self.load()
+        self._shard_variants[base_key] = variant
+        if persist:
+            self.save()
 
     def __len__(self) -> int:
         if not self._loaded:
@@ -406,6 +436,158 @@ def autotune(spec: QuantSpec, m: int, k: int, batch: int, backend: str, *,
     return dataclasses.replace(winner, interpret=interpret)
 
 
+# ------------------------------------------------- pipelined collectives
+# (pipeline_chunks, collective_impl) candidates timed against the
+# one-shot plan for every k-sharded linear when ExecPolicy.shard_pipeline
+# is 0 (auto).  Chunk counts that don't divide the local k slice (or
+# break packed-storage alignment) are dropped per linear.
+SHARD_VARIANT_GRID = ((1, "xla"), (1, "ring"), (2, "ring"), (4, "ring"),
+                      (2, "xla"))
+
+
+def _variant_prune(variants, spec, shard, m: int, batch: int,
+                   device: str, interpret: bool | None,
+                   search: str) -> list:
+    """Model-guided pruning of the variant grid: rank by the calibrated
+    collective-time term (obs.perfmodel) and keep the one-shot base plus
+    the predicted-best few.  No collective calibration -> measure all
+    (same fallback contract as the tile sweep)."""
+    from repro.distributed import collectives as coll
+    from repro.obs import perfmodel
+
+    if search not in ("model", "auto") or len(variants) <= MODEL_TOP_K:
+        return list(variants)
+    calib = perfmodel.load_calibration(
+        device=device, interpret=perfmodel.effective_interpret(interpret))
+    reg = obs.registry()
+    if calib is None or not getattr(calib, "collective", None):
+        reg.counter("dispatch_autotune_model_fallback_total",
+                    help="model-guided searches that fell back to "
+                         "the full sweep (no matching calibration)",
+                    backend="shard_variants").inc()
+        return list(variants)
+    n = shard.axis_size(shard.k)
+    lb = batch // shard.axis_size(shard.batch)
+    elems = m * lb  # the partial output one device contracts
+
+    def pred(v):
+        pc, impl = v
+        hops, nbytes = coll.collective_cost(
+            impl=impl, collective=shard.collective, axis_size=n,
+            elems=elems, pipeline_chunks=pc)
+        return perfmodel.predict_collective(
+            calls=pc, hops=hops, nbytes=nbytes, collective=calib.collective)
+
+    ranked = sorted(variants, key=pred)
+    keep = ranked[:MODEL_TOP_K]
+    if (1, "xla") not in keep:
+        keep[-1] = (1, "xla")
+    reg.counter("dispatch_autotune_model_pruned_total",
+                help="candidates skipped by model-guided search",
+                backend="shard_variants").inc(len(variants) - len(keep))
+    return keep
+
+
+def tune_shard_variants(spec: QuantSpec, m: int, k: int, batch: int,
+                        backend: str, shard, mesh, *,
+                        device: str | None = None,
+                        interpret: bool | None = None,
+                        acc_dtype: str = "float32", reps: int = 1,
+                        persist: bool = True,
+                        search: str = "auto") -> dict:
+    """Time pipelined-collective variants of one k-sharded linear under
+    the live mesh and cache the winner.
+
+    ``m/k/batch`` are GLOBAL shapes and ``shard`` the linear's derived
+    one-shot-or-not ShardSpec; each (pipeline_chunks, collective_impl)
+    candidate from ``SHARD_VARIANT_GRID`` re-shapes it, gets a kernel
+    plan on its per-chunk shapes (cached winner or heuristic — kernel
+    tiles and collective layout tune independently), and the whole
+    ``run_sharded`` linear (compute + collective, epilogue excluded) is
+    timed end-to-end on synthetic global operands.  The winner lands in
+    the plan cache's additive ``shard_variants`` table keyed by the
+    one-shot base plan key, which is how plan() replays it at trace time
+    and how warm restarts skip re-measuring.  Timing rows carry the
+    analytic (hops, bytes) of each candidate — the calibration data for
+    perfmodel's collective-time term."""
+    global num_timed_candidates
+    import jax
+
+    from repro.dispatch import shard as _shard
+    from repro.distributed import collectives as coll
+    from repro.obs import perfmodel
+
+    device = device or registry.device_kind()
+    base_shard = dataclasses.replace(shard, pipeline_chunks=1,
+                                     collective_impl="xla")
+    d = plan_d(spec, m, k)
+    blm, blk, blb = base_shard.exec_mkb(m, k, batch)
+    base_key = plan_key(backend, spec, d, blm, blk, blb, device,
+                        acc_dtype, base_shard.tag())
+    hit = cache().shard_variant(base_key)
+    if hit is not None:
+        return hit
+
+    n = shard.axis_size(shard.k)
+    k_local = k // n
+    cands, seen = [], set()
+    for pc, impl in SHARD_VARIANT_GRID:
+        if pc > 1 and (k_local % pc
+                       or not _shard._quant_aligned(spec, k_local // pc)):
+            continue
+        if (pc, impl) not in seen:
+            seen.add((pc, impl))
+            cands.append((pc, impl))
+    cands = _variant_prune(cands, spec, shard, m, batch, device,
+                           interpret, search)
+
+    be = registry.get_backend(backend)
+    pol = ExecPolicy(interpret=interpret, acc_dtype=acc_dtype)
+    params, x = _synthetic_call(spec, d, m, k, batch)
+    eff_interpret = perfmodel.effective_interpret(interpret)
+    lb = batch // shard.axis_size(shard.batch)
+    elems = m * lb
+    rows = []
+    with obs.tracer().span("autotune.shard_variants", cat="dispatch",
+                           key=base_key, candidates=len(cands)):
+        for pc, impl in cands:
+            cand = dataclasses.replace(shard, pipeline_chunks=pc,
+                                       collective_impl=impl)
+            clm, clk, clb = cand.exec_mkb(m, k, batch)
+            ckey = plan_key(backend, spec, d, clm, clk, clb, device,
+                            acc_dtype, cand.tag())
+            p = cache().get(ckey) or heuristic_plan(spec, d, clm, clk, clb,
+                                                    backend, pol)
+            p = dataclasses.replace(p, interpret=interpret, shard=cand)
+            fn = jax.jit(lambda pr, xr, _p=p: _shard.run_sharded(
+                be, spec, _p, pr, xr, k=k, mesh=mesh))
+            num_timed_candidates += 1
+            jax.block_until_ready(fn(params, x))  # compile + warm
+            best = float("inf")
+            for _ in range(max(reps, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(params, x))
+                best = min(best, time.perf_counter() - t0)
+            hops, nbytes = coll.collective_cost(
+                impl=impl, collective=cand.collective, axis_size=n,
+                elems=elems, pipeline_chunks=pc)
+            rows.append({"s": best, "pipeline_chunks": pc,
+                         "collective_impl": impl, "hops": hops,
+                         "bytes": nbytes, "interpret": eff_interpret,
+                         "device": device, "winner": False})
+            obs.registry().counter(
+                "dispatch_autotune_candidates_total",
+                help="tile candidates measured",
+                backend="shard_variants").inc()
+    best_row = min(rows, key=lambda r: r["s"])
+    best_row["winner"] = True
+    variant = {"pipeline_chunks": best_row["pipeline_chunks"],
+               "collective_impl": best_row["collective_impl"],
+               "rows": sorted(rows, key=lambda r: r["s"])}
+    cache().put_shard_variant(base_key, variant, persist=persist)
+    return variant
+
+
 def warm(requests, *, policy: ExecPolicy | None = None,
          persist: bool = True) -> dict[str, ExecPlan]:
     """Resolve a batch of collected plan requests up front (engine
@@ -419,16 +601,42 @@ def warm(requests, *, policy: ExecPolicy | None = None,
     persisted); otherwise keys resolve to their cached winner when one
     exists, falling back to the heuristic — heuristic plans are NOT
     written to the cache, so a later autotune run can still improve
-    them."""
+    them.
+
+    ``policy.shard_pipeline == 0`` (auto) additionally times pipelined-
+    collective variants of every k-sharded request under the live mesh
+    (``tune_shard_variants``) before warming its kernel plan — the
+    variant winner reshapes the request, so the kernel plan is tuned on
+    the winner's per-chunk shapes and plan() finds both at trace time.
+    shard_pipeline=0 is its own opt-in: the variant grid is timed even
+    when kernel-tile autotuning is off (kernel plans then stay
+    heuristic for every variant, so the comparison isolates the
+    collective strategy)."""
     policy = policy or ExecPolicy()
     out: dict[str, ExecPlan] = {}
     device = registry.device_kind()
+    mesh = None
+    if policy.shard_pipeline == 0:
+        from repro.distributed.sharding import active_mesh
+
+        mesh = active_mesh()
     for req in dict.fromkeys(requests):
         spec, m, k, batch, backend = req[:5]
         shard = getattr(req, "shard", None)
         tag = getattr(req, "tag", "-")
         d = plan_d(spec, m, k)
-        lm, lk, lb = shard.local_mkb(m, k, batch) if shard is not None \
+        if mesh is not None and shard is not None and shard.k is not None:
+            search = (policy.autotune
+                      if policy.autotune in ("model", "full") else "auto")
+            var = tune_shard_variants(
+                spec, m, k, batch, backend, shard, mesh, device=device,
+                interpret=policy.interpret, acc_dtype=policy.acc_dtype,
+                persist=persist, search=search)
+            shard = dataclasses.replace(
+                shard, pipeline_chunks=int(var["pipeline_chunks"]),
+                collective_impl=str(var["collective_impl"]))
+            tag = shard.tag()
+        lm, lk, lb = shard.exec_mkb(m, k, batch) if shard is not None \
             else (m, k, batch)
         key = plan_key(backend, spec, d, lm, lk, lb, device,
                        policy.acc_dtype, tag)

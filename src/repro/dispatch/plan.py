@@ -29,7 +29,8 @@ from repro import obs
 from repro.core.spec import QuantSpec
 from repro.dispatch import registry
 from repro.dispatch.shard import (
-    COLLECTIVES, ShardSpec, plan_shard_tag, shard_spec_for,
+    COLLECTIVE_IMPLS, COLLECTIVES, ShardSpec, plan_shard_tag,
+    shard_spec_for,
 )
 
 
@@ -106,6 +107,17 @@ class ExecPolicy:
     shard_collective : how k-sharded (row-parallel) linears resolve
         their partial sums under a mesh: 'psum' | 'reduce_scatter'
         (see dispatch.shard.ShardSpec).
+    shard_pipeline : contraction pipeline chunks for k-sharded linears.
+        1 (default) is the classic one-collective-per-linear plan; N>1
+        splits the local k slice into N chunks whose collectives overlap
+        the next chunk's consume; 0 means *auto* — the autotuner times
+        pipelined variants against the one-shot plan per linear and the
+        measured winner (persisted in the plan cache's shard_variants
+        table) is replayed on warm restarts.
+    shard_impl : collective implementation for k-sharded linears:
+        'xla' (fused psum/psum_scatter) | 'ring' (explicit ppermute
+        hops, independently schedulable under compute).  Ignored when
+        shard_pipeline == 0 (auto picks the impl too).
     plan : a fully explicit ExecPlan override (skips planning entirely).
     """
 
@@ -115,6 +127,8 @@ class ExecPolicy:
     acc_dtype: str = "float32"
     autotune: bool | str = False
     shard_collective: str = "psum"
+    shard_pipeline: int = 1
+    shard_impl: str = "xla"
     plan: ExecPlan | None = None
 
     def __post_init__(self):
@@ -129,6 +143,12 @@ class ExecPolicy:
         if self.shard_collective not in COLLECTIVES:
             raise ValueError(f"shard_collective={self.shard_collective!r} "
                              f"must be one of {COLLECTIVES}")
+        if self.shard_pipeline < 0:
+            raise ValueError(f"shard_pipeline={self.shard_pipeline} must "
+                             f"be >= 0 (0 = autotuned)")
+        if self.shard_impl not in COLLECTIVE_IMPLS:
+            raise ValueError(f"shard_impl={self.shard_impl!r} must be one "
+                             f"of {COLLECTIVE_IMPLS}")
 
 
 DEFAULT_POLICY = ExecPolicy()
@@ -298,14 +318,21 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
     from repro.distributed.sharding import active_mesh, active_rules
 
     mesh = active_mesh()
+    # shard_pipeline == 0 (auto) derives the one-shot base layout first;
+    # the tuned (chunks, impl) winner — if the cache has one — replaces
+    # it below, once the backend (part of the variant key) is known.
     shard = shard_spec_for(spec, shard_axes, m, k, batch, mesh,
                            lead_batch=lead_batch,
                            collective=policy.shard_collective,
-                           rules=active_rules())
+                           rules=active_rules(),
+                           pipeline_chunks=max(policy.shard_pipeline, 1),
+                           collective_impl=(
+                               policy.shard_impl
+                               if policy.shard_pipeline != 0 else "xla"))
     if shard is not None and not shard.is_sharded:
         shard = None
     tag = plan_shard_tag(shard, mesh)
-    lm, lk, lb = shard.local_mkb(m, k, batch) if shard else (m, k, batch)
+    lm, lk, lb = shard.exec_mkb(m, k, batch) if shard else (m, k, batch)
 
     be = None
     if policy.backend is not None:
@@ -337,6 +364,23 @@ def plan(spec: QuantSpec, m: int, k: int, batch: int = 1, *,
                 backend=be.name).inc()
 
     import repro.dispatch.autotune as at
+
+    if policy.shard_pipeline == 0 and shard is not None \
+            and shard.k is not None:
+        var = at.cache().shard_variant(
+            plan_key(be.name, spec, d, lm, lk, lb, device,
+                     policy.acc_dtype, tag))
+        if var is not None:
+            shard = shard_spec_for(
+                spec, shard_axes, m, k, batch, mesh,
+                lead_batch=lead_batch,
+                collective=policy.shard_collective,
+                rules=active_rules(),
+                pipeline_chunks=int(var["pipeline_chunks"]),
+                collective_impl=str(var["collective_impl"]))
+            tag = plan_shard_tag(shard, mesh)
+            lm, lk, lb = (shard.exec_mkb(m, k, batch) if shard
+                          else (m, k, batch))
 
     cached = at.cache().get(plan_key(be.name, spec, d, lm, lk, lb, device,
                                      policy.acc_dtype, tag))

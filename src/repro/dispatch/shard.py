@@ -39,14 +39,18 @@ import dataclasses
 from dataclasses import dataclass
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
 from repro.core.epilogue import apply_epilogue
+from repro.distributed import collectives as coll
 from repro.distributed import compat
 from repro.distributed import sharding as shd
+from repro.kernels import ops as kops
 
 COLLECTIVES = ("psum", "reduce_scatter")
+COLLECTIVE_IMPLS = ("xla", "ring")
 
 
 @dataclass(frozen=True)
@@ -64,6 +68,13 @@ class ShardSpec:
         replicated over the k axis) or ``reduce_scatter`` (output rows
         scattered over the k axis — the next layer's column-parallel
         input sharding).  Ignored when k is None.
+    pipeline_chunks : number of contraction slices the k-sharded GeMM is
+        split into so chunk i's collective overlaps chunk i+1's consume;
+        1 is the classic one-collective-per-linear plan.  Only
+        meaningful with k sharded.
+    collective_impl : ``xla`` (fused psum/psum_scatter ops) or ``ring``
+        (explicit ppermute hops from distributed.collectives, each hop
+        schedulable under compute).  Only meaningful with k sharded.
     """
 
     mesh_axes: tuple[tuple[str, int], ...] = ()
@@ -71,14 +82,29 @@ class ShardSpec:
     k: str | None = None
     batch: str | None = None
     collective: str = "psum"
+    pipeline_chunks: int = 1
+    collective_impl: str = "xla"
 
     def __post_init__(self):
         if self.collective not in COLLECTIVES:
             raise ValueError(f"collective={self.collective!r} must be one "
                              f"of {COLLECTIVES}")
+        if self.collective_impl not in COLLECTIVE_IMPLS:
+            raise ValueError(
+                f"collective_impl={self.collective_impl!r} must be one of "
+                f"{COLLECTIVE_IMPLS}")
         if self.m is not None and self.k is not None:
             raise ValueError("m and k cannot both be sharded by one linear "
                              f"(m={self.m!r}, k={self.k!r})")
+        if self.pipeline_chunks < 1:
+            raise ValueError(
+                f"pipeline_chunks={self.pipeline_chunks} must be >= 1")
+        if self.k is None and (self.pipeline_chunks != 1
+                               or self.collective_impl != "xla"):
+            raise ValueError(
+                "pipeline_chunks/collective_impl apply only to k-sharded "
+                "(row-parallel) linears — there is no contraction "
+                "collective to pipeline otherwise")
 
     # ------------------------------------------------------------ sizes
     def axis_size(self, axis: str | None) -> int:
@@ -91,18 +117,39 @@ class ShardSpec:
         return any(a is not None and self.axis_size(a) > 1
                    for a in (self.m, self.k, self.batch))
 
+    @property
+    def is_pipelined(self) -> bool:
+        return self.pipeline_chunks > 1 or self.collective_impl != "xla"
+
     def local_mkb(self, m: int, k: int, batch: int) -> tuple[int, int, int]:
-        """Per-device (m, k, batch-rows) — what tile heuristics and the
-        autotuner must plan/time under this spec."""
+        """Per-device (m, k, batch-rows) under this spec."""
         return (m // self.axis_size(self.m), k // self.axis_size(self.k),
                 batch // self.axis_size(self.batch))
 
+    def exec_mkb(self, m: int, k: int, batch: int) -> tuple[int, int, int]:
+        """Per-kernel-invocation (m, k, batch-rows) — what tile
+        heuristics and the autotuner must plan/time under this spec.
+        Same as :meth:`local_mkb` except the contraction dim shrinks by
+        ``pipeline_chunks``: a pipelined plan invokes the kernel once
+        per k-chunk."""
+        lm, lk, lb = self.local_mkb(m, k, batch)
+        return lm, lk // self.pipeline_chunks, lb
+
     # ------------------------------------------------------------- keys
     def tag(self) -> str:
-        """Cache-key fragment: mesh shape + the shard choice."""
+        """Cache-key fragment: mesh shape + the shard choice.
+
+        The pipeline suffix (``/pc{n}.{impl}``) is appended only when it
+        differs from the classic one-shot layout, so every key a v3
+        cache file recorded before pipelining existed is byte-identical
+        to the key the same plan derives today (additive-key
+        discipline)."""
         mesh = ".".join(f"{a}{s}" for a, s in self.mesh_axes)
-        return (f"{mesh}/m={self.m or '-'}/k={self.k or '-'}"
+        base = (f"{mesh}/m={self.m or '-'}/k={self.k or '-'}"
                 f"/b={self.batch or '-'}/{self.collective}")
+        if self.is_pipelined:
+            base += f"/pc{self.pipeline_chunks}.{self.collective_impl}"
+        return base
 
 
 def mesh_tag(mesh) -> str:
@@ -134,10 +181,22 @@ def _quant_aligned(spec, k_local: int) -> bool:
     return True
 
 
+def _collective_fallback(kind: str, **labels):
+    """Count a downgraded collective layout (satellite of ISSUE 10: the
+    reduce_scatter->psum fallback used to be silent)."""
+    obs.registry().counter(
+        "dispatch_shard_collective_fallback_total",
+        help="shard derivations that downgraded the requested collective "
+             "layout (reduce_scatter->psum, pipeline-chunk clamping)",
+        kind=kind, **labels).inc()
+
+
 def shard_spec_for(spec, axes, m: int, k: int, batch: int, mesh, *,
                    lead_batch: int | None = None,
                    collective: str = "psum",
-                   rules: str = "default") -> ShardSpec | None:
+                   rules: str = "default",
+                   pipeline_chunks: int = 1,
+                   collective_impl: str = "xla") -> ShardSpec | None:
     """Derive the ShardSpec for one linear, or None to stay under GSPMD.
 
     ``axes``: the weight's logical (out, in) axis names — the
@@ -148,6 +207,16 @@ def shard_spec_for(spec, axes, m: int, k: int, batch: int, mesh, *,
     empty under 'serve_tp', which therefore never batch-shards); a
     candidate is taken only when the dim divides and (for k) the packed
     storage stays shard-aligned.
+
+    ``pipeline_chunks``/``collective_impl`` request the pipelined
+    contraction (ISSUE 10): the request is *clamped*, never rejected —
+    the chunk count drops to the largest value that both divides the
+    local k slice and keeps every packed-storage view (scales / idx /
+    u8) whole per chunk, and both knobs normalize to the one-shot
+    defaults for anything that is not k-sharded.  Every downgrade
+    (including the pre-existing reduce_scatter->psum fallback when m
+    does not divide the k axis) bumps
+    ``dispatch_shard_collective_fallback_total``.
 
     Adaptive-d specs never shard: ``resolve_d`` keys off the *global*
     (in, out) dims the weights were quantized with, and a local-shape
@@ -180,6 +249,20 @@ def shard_spec_for(spec, axes, m: int, k: int, batch: int, mesh, *,
     if k_axis is not None and collective == "reduce_scatter" \
             and m % mesh.shape[k_axis]:
         collective = "psum"  # cannot scatter the output rows: fall back
+        _collective_fallback("reduce_scatter_to_psum", axis=k_axis)
+    pc, impl = 1, "xla"
+    if k_axis is not None:
+        impl = collective_impl if collective_impl in COLLECTIVE_IMPLS \
+            else "xla"
+        want = max(int(pipeline_chunks), 1)
+        pc = want
+        k_local = k // mesh.shape[k_axis]
+        while pc > 1 and (k_local % pc
+                          or not _quant_aligned(spec, k_local // pc)):
+            pc -= 1
+        if pc != want:
+            _collective_fallback("pipeline_chunks_clamped", axis=k_axis,
+                                 requested=want, clamped=pc)
     lead = batch if lead_batch is None else lead_batch
     b_axis = None
     for cand in act_rules.get("batch", ()):
@@ -192,7 +275,8 @@ def shard_spec_for(spec, axes, m: int, k: int, batch: int, mesh, *,
     if m_axis is None and k_axis is None and b_axis is None:
         return None
     return ShardSpec(mesh_axes=mesh_axes, m=m_axis, k=k_axis, batch=b_axis,
-                     collective=collective)
+                     collective=collective, pipeline_chunks=pc,
+                     collective_impl=impl)
 
 
 # -------------------------------------------------------------- execution
@@ -221,6 +305,23 @@ def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
     With a k-sharded (row-parallel) linear the epilogue runs once after
     the contraction collective; otherwise it fuses into the kernel
     writeback per shard (disjoint m rows) whenever the backend can.
+
+    Pipelined plans (``shard.pipeline_chunks > 1`` and/or
+    ``collective_impl == 'ring'``) split the local contraction into
+    k-chunks: the collective for chunk i (a ppermute ring under the ring
+    impl, so each hop is an independently schedulable HLO) carries no
+    data dependency on chunk i+1's produce/consume, letting the compiler
+    slide the communication under the next chunk's compute.  Partials
+    are double-buffered — the chunk whose collective is in flight
+    (``pending``) is only folded into the accumulator after the *next*
+    chunk's compute has been issued.
+
+    Column-parallel (m-sharded) outputs are never gathered here:
+    ``out_specs`` leaves them m-sharded, so the all-gather a consumer
+    might need is deferred into that consumer's own produce phase (and
+    vanishes entirely when the next linear is row-parallel — its k
+    sharding *is* this layer's m sharding, the up-proj -> down-proj
+    pattern).
     """
     s = plan.shard
     size = dict(s.mesh_axes)
@@ -230,6 +331,8 @@ def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
             f"plan was sharded for mesh {dict(s.mesh_axes)} but the active "
             f"mesh is {dict(mesh.shape)}; re-plan under the current mesh")
     k_local = k // size.get(s.k, 1) if s.k else k
+    pc = s.pipeline_chunks if s.k else 1
+    k_chunk = k_local // pc
     inner_plan = dataclasses.replace(plan, shard=None)
     rank = x.ndim
     mid = (None,) * (rank - 2)
@@ -253,15 +356,47 @@ def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
     # shard layout so a mesh trace splits step time between them.  The
     # marks are keyed to the *output* of each stage (data dependency, no
     # ordered side channel — safe under shard_map), and fire once per
-    # device shard.
+    # device shard (per chunk when pipelined — the span overlap between
+    # the two families is the measured comms/compute overlap).
     tagname = s.tag()
-    mk_compute = f"shard.compute.{tagname}.k{k_local}"
+    mk_compute = f"shard.compute.{tagname}.k{k_chunk}"
     mk_coll = f"shard.collective.{s.collective}.{tagname}"
+
+    def contract(y):
+        """Resolve k-sharded partials with the planned collective."""
+        n = size[s.k]
+        if s.collective == "reduce_scatter":
+            if s.collective_impl == "ring":
+                return coll.ring_reduce_scatter(y, s.k, axis_size=n,
+                                                dim=y.ndim - 1)
+            return jax.lax.psum_scatter(y, s.k,
+                                        scatter_dimension=y.ndim - 1,
+                                        tiled=True)
+        if s.collective_impl == "ring":
+            return coll.ring_psum(y, s.k, axis_size=n)
+        return jax.lax.psum(y, s.k)
+
+    def compute_chunk(p_c, x_c):
+        x_c = obs.jit_begin(x_c, mk_compute)
+        y = backend.run(spec, inner_plan, p_c, x_c, k=k_chunk,
+                        precision=precision)
+        return obs.jit_end(y, mk_compute, cat="shard",
+                           hist="shard_compute_s",
+                           hist_labels={"tag": tagname})
+
+    def collect_chunk(y):
+        y = obs.jit_begin(y, mk_coll)
+        y = contract(y)
+        return obs.jit_end(y, mk_coll, cat="shard",
+                           hist="shard_collective_s",
+                           hist_labels={"collective": s.collective,
+                                        "axis": s.k,
+                                        "impl": s.collective_impl})
 
     def local(ops):
         b_l, r_l = ops.get("bias"), ops.get("residual")
-        x_l = obs.jit_begin(ops["x"], mk_compute)
         if s.k is None:
+            x_l = obs.jit_begin(ops["x"], mk_compute)
             if fuse:
                 y = backend.run(spec, inner_plan, ops["params"], x_l,
                                 k=k_local, precision=precision,
@@ -277,21 +412,26 @@ def run_sharded(backend, spec, plan, params: dict, x, *, k: int, mesh,
             return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
         # row-parallel: partial sums over the local k slice; the epilogue
         # must see the *resolved* sum, never the per-shard partials
-        y = backend.run(spec, inner_plan, ops["params"], x_l,
-                        k=k_local, precision=precision)
-        y = obs.jit_end(y, mk_compute, cat="shard",
-                        hist="shard_compute_s",
-                        hist_labels={"tag": tagname})
-        y = obs.jit_begin(y, mk_coll)
-        if s.collective == "reduce_scatter":
-            y = jax.lax.psum_scatter(y, s.k, scatter_dimension=y.ndim - 1,
-                                     tiled=True)
-        else:
-            y = jax.lax.psum(y, s.k)
-        y = obs.jit_end(y, mk_coll, cat="shard",
-                        hist="shard_collective_s",
-                        hist_labels={"collective": s.collective,
-                                     "axis": s.k})
+        if pc == 1:
+            y = compute_chunk(ops["params"], ops["x"])
+            y = collect_chunk(y)
+            return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
+        d_pack = 1 if spec.mode == "bf16" else int(spec.d)
+        sb_pack = 1 if spec.mode == "bf16" else int(spec.scale_block)
+        p_chunks = kops.k_chunk_params(ops["params"], k=k_local, chunks=pc,
+                                       d=d_pack, scale_block=sb_pack)
+        x_chunks = jnp.split(ops["x"], pc, axis=-1)
+        out = None      # partials whose collective has been retired
+        pending = None  # the chunk whose collective is in flight
+        for ci in range(pc):
+            y_c = compute_chunk(p_chunks[ci], x_chunks[ci])
+            if pending is not None:
+                # retire the previous chunk only after this chunk's
+                # compute is issued — the in-flight ring and the compute
+                # above share no dataflow, so the scheduler overlaps them
+                out = pending if out is None else out + pending
+            pending = collect_chunk(y_c)
+        y = pending if out is None else out + pending
         return apply_epilogue(y, epilogue, bias=b_l, residual=r_l)
 
     fn = compat.shard_map(local, mesh=mesh, in_specs=(in_specs,),

@@ -33,6 +33,19 @@ def set_mesh(mesh):
     return mesh
 
 
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis from inside a shard_map body.
+
+    Newer jax exposes ``jax.lax.axis_size``; on older releases the
+    idiomatic spelling is ``psum(1, axis)``, which constant-folds to a
+    Python int whenever the axis extent is statically known (always
+    true under the fully-manual shard_maps this repo builds)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return int(fn(axis))
+    return int(jax.lax.psum(1, axis))
+
+
 def shard_map(f=None, *, mesh, in_specs, out_specs, manual_axes=None,
               check: bool = False):
     """``shard_map`` across jax versions.

@@ -258,6 +258,51 @@ def int4_matmul(u8: jnp.ndarray, scales: jnp.ndarray, x: jnp.ndarray, *,
     return y[:, 0] if squeeze else y
 
 
+def k_chunk_params(params: dict, *, k: int, chunks: int, d: int = 1,
+                   scale_block: int = 1) -> list[dict]:
+    """Split a quantized linear's packed params into ``chunks``
+    contraction slices — the chunked-consume entry point for pipelined
+    sharded execution (dispatch.shard).
+
+    Every packed leaf stores the contraction dim in columns at a
+    leaf-specific density: ``w`` (dense) has k columns, ``idx`` k/d
+    packed tuples, ``u8`` k/2 nibble pairs, ``scales`` k/scale_block
+    blocks.  Chunk c of leaf L is columns [c*w_L, (c+1)*w_L) where
+    ``w_L = cols_L // chunks``; ``codebook`` (and any unrecognized leaf)
+    is the 16-entry value table — replicated into every chunk.  Feeding
+    chunk c's slice dict plus the matching k-slice of x back through the
+    same backend reproduces that chunk's partial product exactly: the
+    LUT produce runs per chunk against 1/chunks of the consume columns,
+    which is the granularity the collective ring overlaps.
+
+    Requires k to be chunk-aligned at every density (the dispatch layer
+    guarantees this by construction: shard_spec_for only admits
+    pipeline_chunks where k_chunk stays scale_block/d/nibble aligned).
+    """
+    chunks = max(int(chunks), 1)
+    if chunks == 1:
+        return [dict(params)]
+    cols = {"w": k, "idx": k // max(int(d), 1), "u8": k // 2,
+            "scales": k // max(int(scale_block), 1)}
+    out = []
+    for c in range(chunks):
+        sl = {}
+        for name, leaf in params.items():
+            width = cols.get(name)
+            if width is None:  # codebook etc.: no contraction dim
+                sl[name] = leaf
+                continue
+            if width % chunks:
+                raise ValueError(
+                    f"k_chunk_params: leaf {name!r} has {width} "
+                    f"contraction columns, not divisible by {chunks}")
+            w = width // chunks
+            sl[name] = jax.lax.slice_in_dim(leaf, c * w, (c + 1) * w,
+                                            axis=1)
+        out.append(sl)
+    return out
+
+
 def profile_gemm(kind: str, m: int, k: int, b: int, *, d: int = 3,
                  scale_block: int | None = None, reps: int = 3,
                  interpret: bool | None = None, seed: int = 0) -> dict:

@@ -90,7 +90,9 @@ def exec_policy(args) -> dispatch.ExecPolicy | None:
     if backend is None and not args.autotune and args.mesh is None:
         return None
     return dispatch.ExecPolicy(backend=backend, autotune=args.autotune,
-                               shard_collective=args.shard_collective)
+                               shard_collective=args.shard_collective,
+                               shard_pipeline=args.shard_pipeline,
+                               shard_impl=args.shard_impl)
 
 
 def parse_mesh(s: str):
@@ -201,6 +203,8 @@ def run_continuous(args, params, cfg, mesh=None):
                     autotune_cache=args.autotune_cache,
                     mesh=mesh, mesh_rules=args.mesh_rules,
                     shard_collective=args.shard_collective,
+                    shard_pipeline=args.shard_pipeline,
+                    shard_impl=args.shard_impl,
                     kv_quant=kv_spec,
                     kv_pool_bytes=(int(args.kv_pool_mib * 2**20)
                                    if args.kv_pool_mib else None),
@@ -349,6 +353,18 @@ def main(argv=None):
     ap.add_argument("--shard-collective", default="psum",
                     choices=["psum", "reduce_scatter"],
                     help="contraction collective for row-parallel linears")
+    ap.add_argument("--shard-pipeline", type=int, default=1,
+                    metavar="CHUNKS",
+                    help="pipeline the TP contraction: split the local "
+                         "contraction dim into CHUNKS slices so chunk i's "
+                         "collective overlaps chunk i+1's LUT consume "
+                         "(1: one-shot; 0: autotune the variant grid and "
+                         "replay the cached winner)")
+    ap.add_argument("--shard-impl", default="xla",
+                    choices=sorted(dispatch.shard.COLLECTIVE_IMPLS),
+                    help="contraction-collective implementation: 'xla' "
+                         "native psum/psum_scatter, 'ring' explicit "
+                         "ppermute ring (overlappable per hop)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake N host CPU devices (sets XLA_FLAGS; must "
                          "run before jax touches the backend)")

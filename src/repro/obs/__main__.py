@@ -115,11 +115,25 @@ def main(argv=None) -> int:
         except ValueError as e:
             problems.append(f"calibrate: {e}")
         else:
+            # additive collective-time term: fitted from any
+            # shard_variants tables the same plan caches carry (absent
+            # tables -> the block is simply omitted; version unchanged)
+            coll_rows: list = []
+            plan_caches = list(args.plan_cache) or [None]
+            for p in plan_caches:
+                coll_rows += pm.collective_rows_from_plan_cache(p)
+            coll = pm.fit_collective(coll_rows, device=cal.device,
+                                     interpret=cal.interpret)
+            if coll is not None:
+                cal.collective = coll
             out = cal.save(calib_path)
             print(f"calibrated {cal.device} interpret={cal.interpret} "
                   f"from {cal.fit['n_samples']} samples "
                   f"(rms rel err {cal.fit['rms_rel_err']:.2f}, "
-                  f"max {cal.fit['max_abs_rel_err']:.2f}) -> {out}")
+                  f"max {cal.fit['max_abs_rel_err']:.2f}"
+                  + (f"; collective term from {coll['n_samples']} "
+                     f"variant rows" if coll else "")
+                  + f") -> {out}")
 
     if args.check_regressions and not problems:
         cal = pm.load_calibration(calib_path)

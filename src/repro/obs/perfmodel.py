@@ -60,6 +60,18 @@ DEFAULT_TOLERANCE = 3.0
 CONSTANT_NAMES = ("launch_s", "step_s", "produce_s_per_flop",
                   "consume_s_per_op", "hbm_s_per_byte")
 
+# collective-time term (ISSUE 10): predicted extra wall time of a
+# pipelined k-sharded linear relative to its one-shot plan,
+#   dt = coll_call_s * d(kernel calls) + coll_hop_s * d(hops)
+#      + coll_byte_s * d(bytes)
+# fitted per (device, interpret) from the plan cache's shard_variants
+# timing tables.  Unlike CONSTANT_NAMES these may fit NEGATIVE: a
+# negative hop/byte coefficient is the measured overlap benefit — more
+# ring hops *reducing* wall time because they hide under compute.  The
+# block is additive in calibration.json (version stays 1; files without
+# it validate, consumers fall back to measuring every variant).
+COLLECTIVE_CONSTANT_NAMES = ("coll_call_s", "coll_hop_s", "coll_byte_s")
+
 # rough per-element op counts for epilogue activations (the epilogue
 # term rides the consume rate — it executes on the same vector unit)
 _ACT_OPS = {"none": 0.0, "relu": 1.0, "gelu": 8.0, "silu": 6.0}
@@ -248,6 +260,9 @@ class Calibration:
     sources: list = field(default_factory=list)
     version: int = CALIBRATION_VERSION
     created_unix: float = 0.0
+    # additive (ISSUE 10): fitted COLLECTIVE_CONSTANT_NAMES + fit
+    # diagnostics, empty when no shard-variant timings existed
+    collective: dict = field(default_factory=dict)
 
     def matches(self, device: str, interpret: bool) -> bool:
         return self.device == device and self.interpret == bool(interpret)
@@ -256,12 +271,15 @@ class Calibration:
         return self.constants.get(backend) or self.constants["*"]
 
     def as_dict(self) -> dict:
-        return {"version": self.version, "device": self.device,
-                "interpret": self.interpret,
-                "constants": {bk: dict(c)
-                              for bk, c in self.constants.items()},
-                "fit": dict(self.fit), "sources": list(self.sources),
-                "created_unix": self.created_unix}
+        out = {"version": self.version, "device": self.device,
+               "interpret": self.interpret,
+               "constants": {bk: dict(c)
+                             for bk, c in self.constants.items()},
+               "fit": dict(self.fit), "sources": list(self.sources),
+               "created_unix": self.created_unix}
+        if self.collective:
+            out["collective"] = dict(self.collective)
+        return out
 
     def save(self, path: str | os.PathLike) -> Path:
         from repro import faults
@@ -317,6 +335,24 @@ def validate_calibration(doc: dict) -> list[str]:
     fit = doc.get("fit")
     if not isinstance(fit, dict) or "n_samples" not in (fit or {}):
         errs.append("fit block missing n_samples")
+    # the collective block is additive and optional — only validated
+    # when present.  Its constants may legitimately be negative (they
+    # model a *delta* vs the one-shot plan; overlap shows up as a
+    # negative hop coefficient), so only finiteness is required.
+    coll = doc.get("collective")
+    if coll is not None:
+        if not isinstance(coll, dict):
+            errs.append("collective block not an object")
+        else:
+            for name in COLLECTIVE_CONSTANT_NAMES:
+                v = coll.get(name)
+                if not isinstance(v, (int, float)):
+                    errs.append(f"collective.{name} missing or "
+                                f"non-numeric")
+                elif not math.isfinite(v):
+                    errs.append(f"collective.{name}={v} not finite")
+            if "n_samples" not in coll:
+                errs.append("collective block missing n_samples")
     return errs
 
 
@@ -353,7 +389,8 @@ def load_calibration(path: str | os.PathLike | None = None, *,
                    for bk, block in doc["constants"].items()},
         fit=doc.get("fit", {}), sources=doc.get("sources", []),
         version=doc["version"],
-        created_unix=float(doc.get("created_unix", 0.0)))
+        created_unix=float(doc.get("created_unix", 0.0)),
+        collective=doc.get("collective") or {})
     if device is None or interpret is None:
         dev, itp = current_partition()
         device = device if device is not None else dev
@@ -441,6 +478,110 @@ def predict(plan, spec, m: int, k: int, batch: int, *,
 def predict_sample(s: Sample, calib: Calibration | None) -> PredictedCost:
     return predict_features(sample_features(s), calib, s.device,
                             backend=s.backend)
+
+
+# =====================================================================
+# collective-time term (pipelined k-sharded contractions, ISSUE 10)
+# =====================================================================
+def collective_features(*, impl: str, collective: str, axis_size: int,
+                        m: int, b: int, pipeline_chunks: int = 1,
+                        dtype_bytes: int = 4) -> dict:
+    """(calls, hops, bytes) of resolving one k-sharded linear whose
+    per-device partial output is (b, m) f32, under the given collective
+    layout.  The hop/byte counts come from the single source of truth
+    next to the ring implementations
+    (``distributed.collectives.collective_cost``): bytes/hop x hops per
+    the issue's model, summed over pipeline chunks."""
+    from repro.distributed import collectives as coll
+
+    hops, nbytes = coll.collective_cost(
+        impl=impl, collective=collective, axis_size=axis_size,
+        elems=m * b, dtype_bytes=dtype_bytes,
+        pipeline_chunks=pipeline_chunks)
+    return {"calls": max(int(pipeline_chunks), 1), "hops": hops,
+            "bytes": nbytes}
+
+
+def predict_collective(*, calls: float, hops: float, nbytes: float,
+                       collective: dict) -> float:
+    """Predicted wall-time *delta* (seconds, may be negative) of a
+    collective layout relative to the one-shot xla plan of the same
+    linear, from a fitted ``Calibration.collective`` block.  Used by
+    the autotuner to rank pipelined candidates without measuring all
+    chunk counts — only the ordering matters, so the shared one-shot
+    baseline cancels."""
+    return (collective.get("coll_call_s", 0.0) * (calls - 1)
+            + collective.get("coll_hop_s", 0.0) * hops
+            + collective.get("coll_byte_s", 0.0) * nbytes)
+
+
+def collective_rows_from_plan_cache(path: str | os.PathLike | None = None
+                                    ) -> list[dict]:
+    """Per-variant timing rows from the plan cache's ``shard_variants``
+    tables, each annotated with its base key (rows of one key share
+    their compute cost, so only deltas within a key are meaningful)."""
+    from repro.dispatch import autotune as at
+
+    cache = at.PlanCache(path).load()
+    out = []
+    for key, var in sorted(cache._shard_variants.items()):
+        for row in var.get("rows", []):
+            r = dict(row)
+            r["key"] = key
+            out.append(r)
+    return out
+
+
+def fit_collective(rows: list[dict], *, device: str | None = None,
+                   interpret: bool | None = None) -> dict | None:
+    """Least-squares fit of COLLECTIVE_CONSTANT_NAMES from shard-variant
+    timing rows (one partition).  Each key's one-shot row (pc=1, xla) is
+    the per-key baseline; every other row contributes a delta equation
+      s - s_base = call_s*(pc-1) + hop_s*(hops-hops_b) + byte_s*(B-B_b)
+    Plain (signed) lstsq — negative coefficients are the measured
+    overlap benefit.  None when fewer delta rows exist than constants
+    (underdetermined fits mislead the ranking; callers fall back to
+    measuring every variant)."""
+    import numpy as np
+
+    if device is None or interpret is None:
+        dev, itp = current_partition()
+        device = device if device is not None else dev
+        interpret = interpret if interpret is not None else itp
+    by_key: dict[str, list[dict]] = {}
+    for r in rows:
+        if r.get("device") != device or \
+                bool(r.get("interpret")) != bool(interpret):
+            continue
+        by_key.setdefault(r.get("key", "?"), []).append(r)
+    A, y = [], []
+    for key, group in sorted(by_key.items()):
+        base = next((r for r in group
+                     if int(r.get("pipeline_chunks", 1)) == 1
+                     and r.get("collective_impl") == "xla"), None)
+        if base is None:
+            continue
+        for r in group:
+            if r is base:
+                continue
+            A.append([int(r.get("pipeline_chunks", 1)) - 1,
+                      float(r.get("hops", 0)) - float(base.get("hops", 0)),
+                      float(r.get("bytes", 0.0))
+                      - float(base.get("bytes", 0.0))])
+            y.append(float(r["s"]) - float(base["s"]))
+    if len(y) < len(COLLECTIVE_CONSTANT_NAMES):
+        return None
+    A_arr, y_arr = np.asarray(A, float), np.asarray(y, float)
+    theta, *_ = np.linalg.lstsq(A_arr, y_arr, rcond=None)
+    if not np.isfinite(theta).all():
+        return None
+    pred = A_arr @ theta
+    resid = pred - y_arr
+    out = {n: float(v)
+           for n, v in zip(COLLECTIVE_CONSTANT_NAMES, theta)}
+    out["n_samples"] = len(y)
+    out["rms_err_s"] = float(np.sqrt(np.mean(resid ** 2)))
+    return out
 
 
 # =====================================================================

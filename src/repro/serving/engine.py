@@ -127,6 +127,16 @@ class Engine:
         with no FSDP gathers on the hot path.
     shard_collective : 'psum' | 'reduce_scatter' — how row-parallel
         (contraction-sharded) linears resolve partial sums.
+    shard_pipeline : contraction-pipelining depth for row-parallel
+        linears — 1 (default) keeps the one-shot consume+collective,
+        N>1 chunks the local contraction dim so chunk i's ring
+        collective overlaps chunk i+1's LUT consume, and 0 lets the
+        autotuner time the variant grid per linear and replay the
+        winner from the plan cache (``dispatch.autotune
+        .tune_shard_variants``).
+    shard_impl : 'xla' | 'ring' — collective implementation for the
+        contraction reduction; 'ring' uses the explicit ppermute ring
+        whose per-hop dataflow the pipelined path can overlap.
     max_queue : admission control — reject (shed) new submissions when
         the waiting queue is already this deep (None: unbounded, the
         historic behavior).  Shed requests come back with status 'shed'
@@ -168,7 +178,8 @@ class Engine:
                  clock=time.perf_counter, sample_seed: int = 0,
                  backend: str | None = None, autotune: bool | str = False,
                  autotune_cache=None, mesh=None, mesh_rules: str = "serve",
-                 shard_collective: str = "psum", kv_quant=None,
+                 shard_collective: str = "psum", shard_pipeline: int = 1,
+                 shard_impl: str = "xla", kv_quant=None,
                  kv_pool_bytes: int | None = None,
                  max_queue: int | None = None,
                  deadline_s: float | None = None,
@@ -272,7 +283,8 @@ class Engine:
                 dispatch.set_cache_path(autotune_cache)
             self._policy = dispatch.ExecPolicy(
                 backend=backend, autotune=autotune,
-                shard_collective=shard_collective)
+                shard_collective=shard_collective,
+                shard_pipeline=shard_pipeline, shard_impl=shard_impl)
             self.exec_plans = self._resolve_plans(raw_step)
 
     def _export_kv_gauges(self, num_blocks: int, cache_dtype) -> None:

@@ -14,7 +14,12 @@ Acceptance invariants covered here:
   specs, the forced Pallas backend, reduce-scatter collectives, and
   mid-stream preemption;
 * autotuner cache round-trips keyed by mesh shape with zero re-timing
-  on reload.
+  on reload;
+* pipelined collectives (ISSUE 10): the chunked-contraction + ring
+  path is token-identical across psum/reduce_scatter, odd chunk counts
+  clamp (never reject) with the fallback counter bumped, the ring
+  reductions match the XLA natives bit-for-bit, and shard_pipeline=0
+  tunes the variant grid once into the additive shard_variants table.
 """
 
 import os
@@ -154,6 +159,110 @@ def test_plan_key_carries_shard_tag():
     assert key.endswith("|shdata2.model4/m=model/k=-/b=data/psum")
 
 
+# ------------------------------------ pipelined collectives (derivation)
+def _fallbacks(kind, **labels):
+    from repro import obs
+
+    # registry.value()'s series-kind positional shadows the 'kind'
+    # label, so read through the getter (creates-at-zero when unseen)
+    return obs.registry().counter(
+        "dispatch_shard_collective_fallback_total",
+        kind=kind, **labels).value
+
+
+def test_shard_spec_pipelined_tag_additive():
+    """The plan-cache key discipline: pipelining is an additive tag
+    suffix — a one-shot spec keys byte-identically to pre-pipelining
+    caches, and the pipelined spec only appends to that key."""
+    base = shard_spec_for(SPEC, ("embed", "mlp"), 32, 64, 32, MESH42,
+                          lead_batch=4)
+    piped = shard_spec_for(SPEC, ("embed", "mlp"), 32, 64, 32, MESH42,
+                           lead_batch=4, pipeline_chunks=2,
+                           collective_impl="ring")
+    assert not base.is_pipelined and "/pc" not in base.tag()
+    assert piped.is_pipelined and piped.tag() == base.tag() + "/pc2.ring"
+    # exec shapes: tiles are planned per chunk — k divides by the chunks
+    assert base.exec_mkb(32, 64, 32) == base.local_mkb(32, 64, 32)
+    lm, lk, lb = piped.local_mkb(32, 64, 32)
+    assert piped.exec_mkb(32, 64, 32) == (lm, lk // 2, lb)
+
+
+def test_reduce_scatter_fallback_counted():
+    """Satellite: the reduce_scatter->psum downgrade (m doesn't divide
+    the k axis) is no longer silent, one-shot and pipelined alike."""
+    before = _fallbacks("reduce_scatter_to_psum", axis="model")
+    s = shard_spec_for(SPEC, ("embed", "mlp"), 30, 64, 32, MESH42,
+                       lead_batch=4, collective="reduce_scatter")
+    assert s.collective == "psum"
+    assert _fallbacks("reduce_scatter_to_psum", axis="model") == before + 1
+    # the pipelined derivation takes the same fallback AND keeps its
+    # chunked ring layout (the fallback changes the collective, not the
+    # pipeline)
+    s = shard_spec_for(SPEC, ("embed", "mlp"), 30, 64, 32, MESH42,
+                       lead_batch=4, collective="reduce_scatter",
+                       pipeline_chunks=2, collective_impl="ring")
+    assert s.collective == "psum"
+    assert (s.pipeline_chunks, s.collective_impl) == (2, "ring")
+    assert _fallbacks("reduce_scatter_to_psum", axis="model") == before + 2
+
+
+def test_pipeline_chunks_clamped_counted():
+    # k_local = 64/4 = 16: 3 doesn't divide -> clamp to 2 (chunk 8 stays
+    # scale_block-aligned), counted
+    before = _fallbacks("pipeline_chunks_clamped", axis="model",
+                        requested=3, clamped=2)
+    s = shard_spec_for(SPEC, ("embed", "mlp"), 32, 64, 32, MESH42,
+                       lead_batch=4, pipeline_chunks=3)
+    assert s.pipeline_chunks == 2
+    assert _fallbacks("pipeline_chunks_clamped", axis="model",
+                      requested=3, clamped=2) == before + 1
+    # k_local = 32/4 = 8: chunk 4 breaks scale_block=8 alignment -> all
+    # the way back to one-shot (requested 2, clamped 1)
+    s = shard_spec_for(SPEC, ("embed", "mlp"), 32, 32, 32, MESH42,
+                       lead_batch=4, pipeline_chunks=2)
+    assert s.pipeline_chunks == 1 and "/pc" not in s.tag()
+    assert _fallbacks("pipeline_chunks_clamped", axis="model",
+                      requested=2, clamped=1) >= 1
+
+
+def test_pipelined_spec_validation():
+    with pytest.raises(ValueError):
+        ShardSpec(mesh_axes=(("model", 4),), k="model",
+                  collective_impl="bogus")
+    with pytest.raises(ValueError):
+        ShardSpec(mesh_axes=(("model", 4),), k="model", pipeline_chunks=0)
+    with pytest.raises(ValueError):  # pipelining needs a k axis
+        ShardSpec(mesh_axes=(("model", 4),), m="model", pipeline_chunks=2)
+    with pytest.raises(ValueError):
+        dispatch.ExecPolicy(shard_impl="bogus")
+    with pytest.raises(ValueError):
+        dispatch.ExecPolicy(shard_pipeline=-1)
+
+
+def test_plan_cache_shard_variants_roundtrip(tmp_path):
+    """shard_variants is an additive v3 table: files without it load
+    (and answer None), files with it round-trip."""
+    path = tmp_path / "plans.json"
+    c1 = at.PlanCache(path)
+    assert c1.shard_variant("k") is None  # no file at all
+    c1.put_shard_variant("k", {"pipeline_chunks": 2,
+                               "collective_impl": "ring", "rows": []})
+    c2 = at.PlanCache(path)
+    assert c2.shard_variant("k")["pipeline_chunks"] == 2
+    # strip the table from the file -> still loads, answers None
+    import json
+
+    doc = json.loads(path.read_text())
+    doc.pop("shard_variants")
+    doc.pop("crc", None)
+    from repro.obs import artifacts
+
+    artifacts.atomic_write_json(path, artifacts.stamp_crc(doc))
+    c3 = at.PlanCache(path)
+    assert c3.shard_variant("k") is None
+    assert len(c3) == len(c2)
+
+
 # ------------------------------------------------------ sharded engines
 @needs_mesh
 @pytest.mark.parametrize("mode", ["msgemm", "int4_dequant", "bf16"])
@@ -278,6 +387,114 @@ def test_single_device_cache_never_replayed_sharded(tmp_path):
     assert any(k.endswith("|sh-") for k in keys)
     assert any("|shdata2.model4" in k for k in keys)
     assert p1.shard is None
+
+
+# --------------------------------------- pipelined collectives (on-mesh)
+@needs_mesh
+def test_ring_collectives_match_xla():
+    """The explicit ppermute ring reductions are numerically identical
+    to the XLA natives they replace (same block->device layout for the
+    scatter, same totals for the psum — including the non-divisible
+    naive-ring fallback)."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import collectives as coll, compat
+
+    mesh = jax.make_mesh((4,), ("model",))
+    sm = compat.shard_map
+    x = jnp.arange(4 * 8 * 16, dtype=jnp.float32).reshape(4, 8, 16)
+
+    def pair(fn, ref, arr):
+        a = jax.jit(sm(fn, mesh=mesh, in_specs=P("model"),
+                       out_specs=P("model")))(arr)
+        b = jax.jit(sm(ref, mesh=mesh, in_specs=P("model"),
+                       out_specs=P("model")))(arr)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    pair(lambda y: coll.ring_reduce_scatter(y, "model", dim=-1),
+         lambda y: jax.lax.psum_scatter(y, "model",
+                                        scatter_dimension=y.ndim - 1,
+                                        tiled=True), x)
+    pair(lambda y: coll.ring_psum(y, "model"),
+         lambda y: jax.lax.psum(y, "model"), x)
+    pair(lambda y: coll.ring_all_gather(
+             coll.ring_reduce_scatter(y, "model", dim=-1), "model", dim=-1),
+         lambda y: jax.lax.psum(y, "model"), x)
+    # last dim 9 doesn't divide the axis -> the naive shift-and-add ring
+    x_odd = jnp.arange(4 * 2 * 9, dtype=jnp.float32).reshape(4, 2, 9)
+    pair(lambda y: coll.ring_psum(y, "model"),
+         lambda y: jax.lax.psum(y, "model"), x_odd)
+
+
+@needs_mesh
+@pytest.mark.parametrize("collective,pc",
+                         [("psum", 2), ("reduce_scatter", 2), ("psum", 3)])
+def test_pipelined_token_identity(collective, pc):
+    """Acceptance: pipelined plans (chunked contraction + ring
+    collective) generate exactly the single-device engine's tokens —
+    both collectives, including an odd chunk request that clamps
+    per-linear (pc=3 -> 2 on the down-proj, 1 on the attn out-proj)."""
+    p, c = _model(CFG, "msgemm")
+    prompts = _prompts((5, 9, 3), seed=6)
+    _, base = _run(p, c, prompts)
+    eng, piped = _run(p, c, prompts, mesh=_mesh(),
+                      shard_collective=collective,
+                      shard_pipeline=pc, shard_impl="ring")
+    assert piped == base
+    shards = [pl.shard for pl in eng.exec_plans.values()
+              if pl.shard is not None]
+    assert any(s.is_pipelined for s in shards)
+    if pc == 3:  # the clamp is per-linear, never a rejection
+        assert {s.pipeline_chunks for s in shards if s.k is not None} \
+            <= {1, 2}
+
+
+@needs_mesh
+def test_pipelined_preemption_token_identity():
+    """Mid-stream preemption under the pipelined path: eviction +
+    re-prefill replays to the same tokens (host scheduling is oblivious
+    to how the contraction is chunked)."""
+    p, c = _model(CFG, "msgemm")
+    prompts = _prompts((6, 6), seed=5)
+    kw = dict(max_slots=2, block_size=4, prefill_chunk=8, num_blocks=7,
+              max_model_len=16)
+    eng0, base = _run(p, c, prompts, new=10, **kw)
+    eng1, piped = _run(p, c, prompts, new=10, mesh=_mesh(),
+                       shard_pipeline=2, shard_impl="ring", **kw)
+    assert eng0.scheduler.num_preemptions > 0
+    assert eng1.scheduler.num_preemptions == eng0.scheduler.num_preemptions
+    assert piped == base
+
+
+@needs_mesh
+def test_shard_variant_autotune_roundtrip(tmp_path):
+    """shard_pipeline=0: the autotuner times the variant grid once,
+    persists winners to the additive shard_variants table, and a warm
+    rebuild replays them with zero re-timing and identical plans."""
+    import json
+
+    p, c = _model(CFG, "msgemm")
+    cache = tmp_path / "plans.json"
+
+    def build():
+        return Engine(p, c, max_slots=4, block_size=4, prefill_chunk=4,
+                      max_model_len=32, mesh=_mesh(), autotune=True,
+                      shard_pipeline=0, autotune_cache=cache)
+
+    at.num_timed_candidates = 0
+    eng1 = build()
+    assert cache.exists()
+    doc = json.loads(cache.read_text())
+    assert doc.get("shard_variants"), "no variant winners persisted"
+    for v in doc["shard_variants"].values():
+        assert {"pipeline_chunks", "collective_impl", "rows"} <= set(v)
+        assert any(r.get("winner") for r in v["rows"])
+
+    at.num_timed_candidates = 0
+    eng2 = build()
+    assert at.num_timed_candidates == 0, "warm rebuild re-timed candidates"
+    assert eng1.exec_plans == eng2.exec_plans
 
 
 # ------------------------------------------------------------ subprocess
